@@ -1,0 +1,62 @@
+"""Shared benchmark scaffolding: datasets, timing, CSV emission."""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import JoinConfig, recall, similarity_self_join
+from repro.data import (brute_force_pairs, clustered_vectors,
+                        epsilon_for_avg_neighbors)
+from repro.store.vector_store import FlatVectorStore
+
+# benchmark scale knob: the paper runs 100M–1.4B vectors on NVMe; this
+# container validates the same algorithms at laptop scale (repro band 5/5).
+SMALL = os.environ.get("REPRO_BENCH_SMALL", "0") == "1"
+
+
+def scale(n: int) -> int:
+    return max(1000, n // 10) if SMALL else n
+
+
+def dataset(n: int, dim: int = 64, seed: int = 1, avg_neighbors: int = 20):
+    x = clustered_vectors(n, dim, seed=seed)
+    eps = epsilon_for_avg_neighbors(x, avg_neighbors, seed=seed)
+    return x, eps
+
+
+def make_store(x: np.ndarray, workdir: str | None = None):
+    workdir = workdir or tempfile.mkdtemp(prefix="bench_")
+    return FlatVectorStore.from_array(
+        os.path.join(workdir, "data.bin"), x), workdir
+
+
+def run_join(x: np.ndarray, eps: float, **cfg_kw):
+    store, workdir = make_store(x)
+    defaults = dict(epsilon=eps, recall_target=0.9,
+                    memory_budget_bytes=max(1 << 20, x.nbytes // 10),
+                    num_buckets=max(16, x.shape[0] // 100), pad_align=64)
+    defaults.update(cfg_kw)
+    cfg = JoinConfig(**defaults)
+    t0 = time.perf_counter()
+    res = similarity_self_join(store, cfg, workdir=workdir)
+    elapsed = time.perf_counter() - t0
+    return res, elapsed, store
+
+
+def emit(name: str, rows: list[dict]) -> None:
+    """name,us_per_call,derived CSV convention + full row dump."""
+    for r in rows:
+        derived = ";".join(f"{k}={v}" for k, v in r.items()
+                           if k not in ("name", "us_per_call"))
+        print(f"{r.get('name', name)},{r.get('us_per_call', '')},{derived}")
+
+
+def timed_us(fn, *args, repeats: int = 1, **kw) -> tuple[float, object]:
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    return (time.perf_counter() - t0) * 1e6 / repeats, out

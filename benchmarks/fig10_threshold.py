@@ -1,0 +1,28 @@
+"""Fig. 10: execution time vs distance threshold ε (50–500 avg neighbors).
+Paper claim: growth stays sublinear up to 500 neighbors."""
+from __future__ import annotations
+
+from benchmarks.common import dataset, emit, run_join, scale
+from repro.data import clustered_vectors, epsilon_for_avg_neighbors
+
+
+def main() -> None:
+    n = scale(15000)
+    x = clustered_vectors(n, 48, seed=2)
+    rows = []
+    for k in (50, 100, 200, 500):
+        eps = epsilon_for_avg_neighbors(x, min(k, n - 1), seed=2)
+        res, t, _ = run_join(x, eps)
+        rows.append({
+            "name": f"fig10/diskjoin/avg_neighbors={k}",
+            "us_per_call": f"{t*1e6:.0f}",
+            "seconds": f"{t:.2f}",
+            "epsilon": f"{eps:.4f}",
+            "pairs": res.pairs.shape[0],
+            "distance_computations": res.num_distance_computations,
+        })
+    emit("fig10", rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Fig. 11: execution time vs number of buckets (0.1‰–1% of N).
+Paper claim: best around 1‰; too few ⇒ coarse partitioning, too many ⇒
+sub-page buckets and read amplification."""
+from __future__ import annotations
+
+from benchmarks.common import dataset, emit, run_join, scale
+
+
+def main() -> None:
+    n = scale(20000)
+    x, eps = dataset(n, dim=64, avg_neighbors=20)
+    rows = []
+    for frac_label, nb in (("0.5permille", max(4, n // 2000)),
+                           ("1permille", max(8, n // 1000)),
+                           ("5permille", max(16, n // 200)),
+                           ("1percent", max(32, n // 100))):
+        res, t, _ = run_join(x, eps, num_buckets=nb)
+        rows.append({
+            "name": f"fig11/diskjoin/buckets={frac_label}",
+            "us_per_call": f"{t*1e6:.0f}",
+            "seconds": f"{t:.2f}",
+            "num_buckets": nb,
+            "read_amplification":
+                f"{res.io_stats['read_amplification']:.4f}",
+            "cache_hit_rate": f"{res.cache_hit_rate:.3f}",
+            "distance_computations": res.num_distance_computations,
+        })
+    emit("fig11", rows)
+
+
+if __name__ == "__main__":
+    main()

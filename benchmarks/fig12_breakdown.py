@@ -1,0 +1,29 @@
+"""Fig. 12: phase breakdown — bucketing / orchestration / execution.
+Paper claim: orchestration overhead ≈ 5% of total."""
+from __future__ import annotations
+
+from benchmarks.common import dataset, emit, run_join, scale
+
+
+def main() -> None:
+    n = scale(20000)
+    x, eps = dataset(n, dim=64, avg_neighbors=20)
+    res, t, _ = run_join(x, eps)
+    tm = res.timings
+    bucketing = tm.get("bucketing", 0.0)
+    orch = tm.get("orchestration", 0.0)
+    execu = tm.get("execute", 0.0)
+    total = bucketing + orch + execu
+    rows = [{
+        "name": "fig12/breakdown",
+        "us_per_call": f"{t*1e6:.0f}",
+        "bucketing_s": f"{bucketing:.3f}",
+        "orchestration_s": f"{orch:.3f}",
+        "execution_s": f"{execu:.3f}",
+        "orchestration_frac": f"{orch/max(total,1e-9):.3f}",
+    }]
+    emit("fig12", rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Figs. 15+16: I/O vs compute time split and read-amplification table —
+DiskJoin vs DiskANN-join. Paper claims: DiskANN ~70% time in I/O, amp 6–7×;
+DiskJoin ≤21% I/O, amp ≈ 1.003."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import dataset, emit, make_store, run_join, scale
+from repro.baselines.diskann_join import diskann_join
+
+
+def main() -> None:
+    n = scale(8000)
+    x, eps = dataset(n, dim=32, avg_neighbors=10)
+    rows = []
+
+    res, t, store = run_join(x, eps)
+    io = res.io_stats
+    rows.append({
+        "name": "fig15/diskjoin",
+        "us_per_call": f"{t*1e6:.0f}",
+        "total_s": f"{t:.2f}",
+        "io_s": f"{io['read_seconds']:.3f}",
+        "io_frac": f"{io['read_seconds']/max(t,1e-9):.3f}",
+        "total_gb": f"{io['bytes_read_total']/1e9:.4f}",
+        "useful_gb": f"{io['bytes_read_useful']/1e9:.4f}",
+        "amplification": f"{io['read_amplification']:.4f}",
+    })
+
+    store2, _ = make_store(x)
+    sample = np.random.default_rng(0).choice(n, size=max(64, n // 20),
+                                             replace=False)
+    t0 = time.perf_counter()
+    diskann_join(store2, x, eps, sample_queries=sample)
+    t_da = (time.perf_counter() - t0) * (n / len(sample))
+    io2 = store2.stats
+    rows.append({
+        "name": "fig15/diskann",
+        "us_per_call": f"{t_da*1e6:.0f}",
+        "est_total_s": f"{t_da:.2f}",
+        "io_s_sample": f"{io2.read_seconds:.3f}",
+        "total_gb_sample": f"{io2.bytes_read_total/1e9:.3f}",
+        "useful_gb_sample": f"{io2.bytes_read_useful/1e9:.3f}",
+        "amplification": f"{io2.read_amplification:.2f}",
+    })
+    emit("fig15", rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Fig. 7: DiskJoin vs ClusterJoin vs RSHJ — time + distance computations
+across growing dataset sizes. Paper claim: DiskJoin DCs grow ~linearly,
+ClusterJoin near-quadratically; RSHJ OOMs at scale."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import dataset, emit, run_join, scale
+from repro.baselines import cluster_join, rshj_join
+from repro.core import recall
+from repro.data import brute_force_pairs
+
+
+def main() -> None:
+    rows = []
+    for n in (scale(4000), scale(10000), scale(25000)):
+        x, eps = dataset(n, dim=32, avg_neighbors=10)
+        truth = brute_force_pairs(x, eps) if n <= 30000 else None
+
+        res, t_dj, _ = run_join(x, eps, recall_target=0.995)
+        rows.append({
+            "name": f"fig7/diskjoin/n={n}",
+            "us_per_call": f"{t_dj*1e6:.0f}",
+            "seconds": f"{t_dj:.2f}",
+            "distance_computations": res.num_distance_computations,
+            "recall": (f"{recall(res.pairs, truth):.4f}"
+                       if truth is not None else "n/a"),
+        })
+
+        t0 = time.perf_counter()
+        pairs, dc = cluster_join(x, eps)
+        t_cj = time.perf_counter() - t0
+        rows.append({
+            "name": f"fig7/clusterjoin/n={n}",
+            "us_per_call": f"{t_cj*1e6:.0f}",
+            "seconds": f"{t_cj:.2f}",
+            "distance_computations": dc,
+            "recall": "1.0000",  # exact
+        })
+
+        try:
+            t0 = time.perf_counter()
+            pairs, dc = rshj_join(x, eps, tables=16, k=3,
+                                  max_candidates=4_000_000)
+            t_r = time.perf_counter() - t0
+            rows.append({
+                "name": f"fig7/rshj/n={n}",
+                "us_per_call": f"{t_r*1e6:.0f}",
+                "seconds": f"{t_r:.2f}",
+                "distance_computations": dc,
+                "recall": (f"{recall(pairs, truth):.4f}"
+                           if truth is not None else "n/a"),
+            })
+        except MemoryError as e:
+            rows.append({"name": f"fig7/rshj/n={n}", "us_per_call": "",
+                         "status": "OOM (paper Fig.7: fails >=1M)"})
+    emit("fig7", rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Kernel micro-benchmark: pairwise-L2 verify throughput + roofline terms.
+
+Wall-clock here is CPU (container); the roofline columns are the TPU-v5e
+target numbers derived from the kernel's block structure: the (128,128,128)
+tile does 2·128³ MACs on 3·128²·4 B of VMEM traffic — arithmetic intensity
+128/3 FLOP/B ⇒ compute-bound on the MXU at bf16 (ridge at 240 FLOP/B needs
+k-blocking ≥ … see EXPERIMENTS §Roofline for the kernel table)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed_us
+from repro.kernels import ops
+
+PEAK = 197e12
+HBM = 819e9
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    rows = []
+    for m, n, d in ((512, 512, 64), (1024, 1024, 128), (2048, 2048, 128)):
+        a = rng.normal(size=(m, d)).astype(np.float32)
+        b = rng.normal(size=(n, d)).astype(np.float32)
+        us, _ = timed_us(
+            lambda: np.asarray(
+                ops.pairwise_l2_threshold(a, b, 1.0, use_pallas=False)[0]),
+            repeats=3)
+        flops = 2.0 * m * n * d
+        bytes_moved = 4.0 * (m * d + n * d + 2 * m * n)
+        intensity = flops / bytes_moved
+        rows.append({
+            "name": f"kernel/pairwise_l2/{m}x{n}x{d}",
+            "us_per_call": f"{us:.0f}",
+            "gflops_cpu": f"{flops/us/1e3:.2f}",
+            "arith_intensity": f"{intensity:.1f}",
+            "tpu_compute_us": f"{flops/PEAK*1e6:.2f}",
+            "tpu_memory_us": f"{bytes_moved/HBM*1e6:.2f}",
+            "tpu_bound": "compute" if flops / PEAK > bytes_moved / HBM
+                         else "memory",
+        })
+
+    for mb, bd in ((4096, 64), (8192, 128)):
+        x = rng.normal(size=(mb, bd)).astype(np.float32)
+        c = rng.normal(size=(256, bd)).astype(np.float32)
+        us, _ = timed_us(
+            lambda: np.asarray(ops.bucket_assign(x, c, use_pallas=False)[1]),
+            repeats=3)
+        rows.append({
+            "name": f"kernel/bucket_assign/{mb}x256x{bd}",
+            "us_per_call": f"{us:.0f}",
+        })
+    emit("kernel_roofline", rows)
+
+
+if __name__ == "__main__":
+    main()

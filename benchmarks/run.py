@@ -1,0 +1,55 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+``REPRO_BENCH_SMALL=1`` runs each at 1/10 scale (CI smoke).
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (fig7_baselines, fig8_recall, fig9_memory,
+                        fig10_threshold, fig11_buckets, fig12_breakdown,
+                        fig13_crossjoin, fig14_fragmentation, fig15_io,
+                        fig17_ablation, fig18_pruning, kernel_roofline,
+                        randomness)
+
+MODULES = [
+    ("fig7_baselines", fig7_baselines),
+    ("fig8_recall", fig8_recall),
+    ("fig9_memory", fig9_memory),
+    ("fig10_threshold", fig10_threshold),
+    ("fig11_buckets", fig11_buckets),
+    ("fig12_breakdown", fig12_breakdown),
+    ("fig13_crossjoin", fig13_crossjoin),
+    ("fig14_fragmentation", fig14_fragmentation),
+    ("fig15_io", fig15_io),
+    ("fig17_ablation", fig17_ablation),
+    ("fig18_pruning", fig18_pruning),
+    ("randomness", randomness),
+    ("kernel_roofline", kernel_roofline),
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    failures = []
+    for name, mod in MODULES:
+        if only and only not in name:
+            continue
+        t0 = time.perf_counter()
+        print(f"# === {name} ===", flush=True)
+        try:
+            mod.main()
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+        print(f"# {name} done in {time.perf_counter()-t0:.1f}s", flush=True)
+    if failures:
+        print(f"# FAILED: {failures}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Sharded, async, atomic checkpointing with elastic restore."""
+from repro.checkpoint.checkpoint import (CheckpointManager, restore_latest,
+                                         save_checkpoint)
+
+__all__ = ["CheckpointManager", "restore_latest", "save_checkpoint"]

@@ -1,0 +1,168 @@
+"""Checkpoint/restart (fault tolerance, DESIGN §6).
+
+Layout per step:
+    <dir>/step_000123.tmp/      — in-flight writes
+        manifest.json           — step, mesh topology, tree structure, rng
+        arr_00000.npy …         — one file per leaf (host-gathered)
+    <dir>/step_000123/          — atomic rename commit
+
+Properties:
+  * **atomic**: a checkpoint is visible only after the directory rename; a
+    crash mid-write leaves a ``.tmp`` that restore ignores and cleanup
+    reaps.
+  * **async**: ``CheckpointManager(async_save=True)`` snapshots to host
+    memory on the training thread, writes on a daemon thread — the step
+    loop never blocks on disk.
+  * **elastic restore**: leaves are saved host-complete; ``restore`` can
+    re-shard onto a *different* mesh (chip count / topology change after a
+    failure) by passing new shardings.
+  * data-pipeline cursor + python RNG state ride in the manifest, so a
+    restart resumes mid-epoch deterministically.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import re
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree, *,
+                    extra: dict | None = None) -> str:
+    """Blocking save. Returns the committed path."""
+    os.makedirs(directory, exist_ok=True)
+    name = f"step_{step:09d}"
+    tmp = os.path.join(directory, name + ".tmp")
+    final = os.path.join(directory, name)
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves, treedef = _flatten(tree)
+    dtypes = []
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        dtypes.append(str(arr.dtype))
+        if arr.dtype == np.dtype("bfloat16"):
+            arr = arr.view(np.uint16)  # npy-safe container
+        np.save(os.path.join(tmp, f"arr_{i:05d}.npy"), arr)
+    manifest = {
+        "step": step,
+        "num_leaves": len(leaves),
+        "treedef": str(treedef),
+        "dtypes": dtypes,
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def list_checkpoints(directory: str) -> list[tuple[int, str]]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for d in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)", d)
+        if m and os.path.exists(os.path.join(directory, d, "manifest.json")):
+            out.append((int(m.group(1)), os.path.join(directory, d)))
+    return sorted(out)
+
+
+def restore_latest(directory: str, example_tree, *, shardings=None):
+    """Restore newest checkpoint → (step, tree, extra) or None.
+
+    ``example_tree`` fixes the pytree structure; ``shardings`` (optional
+    matching tree of NamedShardings) re-shards onto the current mesh —
+    elastic restart onto a different topology.
+    """
+    ckpts = list_checkpoints(directory)
+    if not ckpts:
+        return None
+    step, path = ckpts[-1]
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves, treedef = _flatten(example_tree)
+    if manifest["num_leaves"] != len(leaves):
+        raise ValueError(
+            f"checkpoint has {manifest['num_leaves']} leaves, model expects "
+            f"{len(leaves)} — architecture mismatch")
+    out_leaves = []
+    for i, (ex, dt) in enumerate(zip(leaves, manifest["dtypes"])):
+        arr = np.load(os.path.join(path, f"arr_{i:05d}.npy"))
+        if dt == "bfloat16":
+            arr = arr.view(jax.numpy.bfloat16.dtype)
+        out_leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, out_leaves)
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda a, s: jax.device_put(a, s), tree, shardings)
+    return step, tree, manifest.get("extra", {})
+
+
+def cleanup(directory: str, keep: int = 3) -> None:
+    ckpts = list_checkpoints(directory)
+    for _, path in ckpts[:-keep]:
+        shutil.rmtree(path, ignore_errors=True)
+    for d in os.listdir(directory) if os.path.isdir(directory) else []:
+        if d.endswith(".tmp"):
+            shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+class CheckpointManager:
+    """Double-buffered async writer with bounded queue (depth 1: a slow
+    disk can delay at most one snapshot, never corrupt one)."""
+
+    def __init__(self, directory: str, keep: int = 3,
+                 async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._q: queue.Queue = queue.Queue(maxsize=1)
+        self._worker = None
+        self._errors: list[Exception] = []
+        if async_save:
+            self._worker = threading.Thread(target=self._drain, daemon=True)
+            self._worker.start()
+
+    def _drain(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, host_tree, extra = item
+            try:
+                save_checkpoint(self.directory, step, host_tree, extra=extra)
+                cleanup(self.directory, self.keep)
+            except Exception as e:  # surfaced on next save()/close()
+                self._errors.append(e)
+
+    def save(self, step: int, tree, extra: dict | None = None) -> None:
+        if self._errors:
+            raise RuntimeError(f"async checkpoint failed: {self._errors[0]}")
+        host_tree = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), tree)
+        if self.async_save:
+            self._q.put((step, host_tree, extra))  # blocks if one in flight
+        else:
+            save_checkpoint(self.directory, step, host_tree, extra=extra)
+            cleanup(self.directory, self.keep)
+
+    def close(self) -> None:
+        if self._worker is not None:
+            self._q.put(None)
+            self._worker.join(timeout=60)
+        if self._errors:
+            raise RuntimeError(f"async checkpoint failed: {self._errors[0]}")

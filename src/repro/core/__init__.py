@@ -1,0 +1,27 @@
+"""DiskJoin core — the paper's contribution as a composable JAX module.
+
+Public API:
+  JoinConfig, JoinResult           — task configuration / output
+  similarity_self_join             — SSJ over an on-disk dataset
+  similarity_cross_join            — bipartite join over two datasets
+  bucketize / build_bucket_graph   — pipeline stages, individually usable
+  gorder / simulate_policy         — orchestration primitives (Fig. 17)
+"""
+from repro.core.bucket_graph import build_bucket_graph, candidate_pair_count
+from repro.core.bucketize import bucketize
+from repro.core.cache import CacheSchedule, simulate_belady, simulate_policy
+from repro.core.executor import JoinExecutor
+from repro.core.join import similarity_cross_join, similarity_self_join
+from repro.core.ordering import edge_schedule, gorder, window_size
+from repro.core.pruning import cap_constant, miss_bound_terms, prune_candidates
+from repro.core.types import (BucketGraph, BucketMeta, JoinConfig, JoinResult,
+                              canonicalize_pairs, recall)
+
+__all__ = [
+    "BucketGraph", "BucketMeta", "CacheSchedule", "JoinConfig",
+    "JoinExecutor", "JoinResult", "bucketize", "build_bucket_graph",
+    "candidate_pair_count", "canonicalize_pairs", "cap_constant",
+    "edge_schedule", "gorder", "miss_bound_terms", "prune_candidates",
+    "recall", "similarity_cross_join", "similarity_self_join",
+    "simulate_belady", "simulate_policy", "window_size",
+]

@@ -1,0 +1,233 @@
+"""Task execution engine (paper §3 "task execution").
+
+Replays the orchestration schedule: walks the edge order, keeps the HBM
+bucket cache in sync with the cache schedule (load on miss, evict the
+designated victim), and verifies bucket pairs with the pairwise-distance
+kernel. Intra-bucket pairs are verified on each bucket's first touch.
+
+Fixed shapes: every bucket is padded to ``bucket_capacity`` rows (MXU-
+aligned) so the verify kernel compiles exactly once. Padded rows sit at +∞
+distance (coordinates 1e15) and can never pass the ε threshold.
+
+Batched dispatch: edges are accumulated into fixed-size batches and verified
+with one vmapped kernel call (cache-evicted slabs stay alive via the pending
+batch's references, so batching never races the eviction schedule).
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cache as cache_mod
+from repro.core import ordering
+from repro.core.types import (BucketGraph, BucketMeta, JoinConfig,
+                              JoinResult)
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.store.vector_store import BucketedVectorStore
+
+PAD_COORD = 1e15  # padded rows: astronomically far from everything
+VERIFY_BATCH = 32  # edges per batched kernel dispatch
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("eps2",))
+def _verify_batch(u: jax.Array, v: jax.Array, eps2: float) -> jax.Array:
+    """(E, cap, d) × (E, cap, d) → bool mask (E, cap, cap)."""
+    d2 = jax.vmap(kref.pairwise_l2)(u, v)
+    return d2 <= eps2
+
+
+class BucketCache:
+    """Padded bucket slabs (host staging), driven by the cache schedule."""
+
+    def __init__(self, store: BucketedVectorStore, capacity_rows: int):
+        self.store = store
+        self.capacity_rows = capacity_rows
+        self._slabs: dict[int, tuple[np.ndarray, np.ndarray, int]] = {}
+        self.loads = 0
+
+    def __contains__(self, b: int) -> bool:
+        return b in self._slabs
+
+    def load(self, b: int) -> None:
+        vecs, ids = self.store.read_bucket(b)
+        n = vecs.shape[0]
+        pad = self.capacity_rows - n
+        if pad > 0:
+            vecs = np.concatenate(
+                [vecs, np.full((pad, vecs.shape[1]), PAD_COORD, vecs.dtype)])
+        self._slabs[b] = (np.asarray(vecs, np.float32), ids, n)
+        self.loads += 1
+
+    def evict(self, b: int) -> None:
+        self._slabs.pop(b, None)
+
+    def get(self, b: int):
+        return self._slabs[b]
+
+    @property
+    def resident(self) -> int:
+        return len(self._slabs)
+
+
+class JoinExecutor:
+    intra_join = True  # cross-join subclass disables intra-bucket pairs
+
+    def __init__(self, store: BucketedVectorStore, meta: BucketMeta,
+                 config: JoinConfig,
+                 attribute_mask: np.ndarray | None = None):
+        """``attribute_mask``: (N,) bool — attribute filtering (paper §3
+        extension): vectors failing the predicate are excluded from
+        verification via a bitmap, before any distance is computed."""
+        self.store = store
+        self.meta = meta
+        self.config = config
+        self.attribute_mask = attribute_mask
+        max_size = int(meta.sizes.max()) if meta.num_buckets else 1
+        cap = config.bucket_capacity or _round_up(max(max_size, 8),
+                                                  config.pad_align)
+        if cap < max_size:
+            raise ValueError(f"bucket_capacity {cap} < max bucket {max_size}")
+        self.bucket_capacity = cap
+        self.padded_bucket_bytes = cap * store.dim * 4
+        self.cache_buckets = max(
+            2, int(config.memory_budget_bytes // self.padded_bucket_bytes))
+
+    # -- orchestration -------------------------------------------------------
+    def plan(self, graph: BucketGraph):
+        """Gorder (optional) → edge order → access seq → cache schedule."""
+        t0 = time.perf_counter()
+        if not self.config.reorder:
+            node_order = np.arange(graph.num_nodes, dtype=np.int64)
+        elif self.config.order_strategy == "spatial":
+            node_order = ordering.spatial_order(self.meta.centers)
+        else:
+            w = ordering.window_size(self.cache_buckets, graph)
+            node_order = ordering.gorder(graph, w)
+        tasks, access_seq, pins = ordering.edge_schedule(graph, node_order)
+        schedule = cache_mod.simulate_policy(
+            access_seq, graph.num_nodes, self.cache_buckets,
+            self.config.eviction_policy, pins)
+        plan_seconds = time.perf_counter() - t0
+        return tasks, access_seq, schedule, plan_seconds
+
+    # -- execution -----------------------------------------------------------
+    def run(self, graph: BucketGraph) -> JoinResult:
+        tasks, access_seq, schedule, plan_seconds = self.plan(graph)
+        cache = BucketCache(self.store, self.bucket_capacity)
+        eps = float(self.config.epsilon)
+
+        pairs_out: list[np.ndarray] = []
+        dists_out: list[np.ndarray] = []
+        dc = 0
+
+        t0 = time.perf_counter()
+        ai = 0  # index into access_seq / schedule.actions
+        actions = schedule.actions
+        eps2 = eps * eps
+        cap = self.bucket_capacity
+        batch: list[tuple] = []  # (entry_a, entry_b, is_intra)
+
+        def ensure(b: int) -> None:
+            nonlocal ai
+            bb, is_hit, victim = actions[ai]
+            assert bb == b, f"schedule desync at access {ai}: {bb} != {b}"
+            ai += 1
+            if not is_hit:
+                if victim is not None:
+                    cache.evict(victim)
+                cache.load(b)
+
+        def flush() -> None:
+            nonlocal dc
+            if not batch:
+                return
+            E = len(batch)
+            u = np.empty((VERIFY_BATCH, cap, self.store.dim), np.float32)
+            v = np.empty_like(u)
+            for i, (ea, eb, _) in enumerate(batch):
+                u[i] = ea[0]
+                v[i] = eb[0]
+            for i in range(E, VERIFY_BATCH):  # pad batch: replay edge 0
+                u[i] = batch[0][0][0]
+                v[i] = batch[0][1][0]
+            if self.config.use_pallas:
+                masks = np.stack([
+                    np.asarray(kops.pairwise_l2_threshold(
+                        u[i], v[i], eps, use_pallas=True)[1])
+                    for i in range(E)])
+            else:
+                masks = np.asarray(_verify_batch(jnp.asarray(u),
+                                                 jnp.asarray(v), eps2))[:E]
+            for i, (ea, eb, intra) in enumerate(batch):
+                na, nb = ea[2], eb[2]
+                m = masks[i][:na, :nb]
+                if intra:
+                    m = np.triu(m, k=1)
+                    dc += na * (na - 1) // 2
+                else:
+                    dc += na * nb
+                if self.attribute_mask is not None:
+                    m = m & self.attribute_mask[ea[1]][:, None] \
+                          & self.attribute_mask[eb[1]][None, :]
+                rows, cols = np.nonzero(m)
+                if rows.size:
+                    diff = ea[0][rows] - eb[0][cols]
+                    d = np.sqrt(np.sum(diff * diff, axis=1))
+                    pairs_out.append(np.stack([ea[1][rows], eb[1][cols]],
+                                              axis=1).astype(np.int64))
+                    dists_out.append(d.astype(np.float32))
+            batch.clear()
+
+        def enqueue(ea, eb, intra: bool) -> None:
+            batch.append((ea, eb, intra))
+            if len(batch) >= VERIFY_BATCH:
+                flush()
+
+        for task in tasks:
+            if task[0] == "touch":
+                b = int(task[1])
+                ensure(b)
+                entry = cache.get(b)
+                if self.intra_join and entry[2] >= 2:
+                    enqueue(entry, entry, True)
+            else:
+                _, u, v = task
+                ensure(int(u))
+                ensure(int(v))
+                enqueue(cache.get(int(u)), cache.get(int(v)), False)
+        flush()
+        exec_seconds = time.perf_counter() - t0
+
+        if pairs_out:
+            raw = np.concatenate(pairs_out)
+            rawd = np.concatenate(dists_out)
+            lo = np.minimum(raw[:, 0], raw[:, 1])
+            hi = np.maximum(raw[:, 0], raw[:, 1])
+            keys = (lo.astype(np.int64) << 32) | hi.astype(np.int64)
+            uniq, first_idx = np.unique(keys, return_index=True)
+            pairs = np.stack([uniq >> 32, uniq & 0xFFFFFFFF], axis=1)
+            keep = pairs[:, 0] != pairs[:, 1]
+            pairs, dists = pairs[keep], rawd[first_idx][keep]
+        else:
+            pairs = np.zeros((0, 2), np.int64)
+            dists = np.zeros(0, np.float32)
+
+        from repro.core.bucket_graph import candidate_pair_count
+        return JoinResult(
+            pairs=pairs, distances=dists,
+            num_distance_computations=dc,
+            num_candidate_pairs=candidate_pair_count(graph, self.meta),
+            cache_hits=schedule.hits, cache_misses=schedule.misses,
+            bucket_loads=cache.loads,
+            io_stats=self.store.stats.snapshot(),
+            timings={"plan": plan_seconds, "execute": exec_seconds},
+        )

@@ -1,0 +1,173 @@
+"""DiskJoin top-level API (paper §3 workflow).
+
+    similarity_self_join(store, config)  →  JoinResult
+    similarity_cross_join(store_x, store_y, config) → JoinResult
+
+Pipeline: bucketize → bucket graph (+ pruning) → orchestrate (Gorder +
+Belady) → execute (kernel verify). Cross-join follows §3's recipe: bucketize
+each dataset, bipartite bucket graph, reorder the *larger* side (streamed
+once) and cache the smaller.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.bucket_graph import build_bucket_graph
+from repro.core.bucketize import bucketize
+from repro.core.center_index import make_center_index
+from repro.core.executor import JoinExecutor
+from repro.core.pruning import prune_candidates
+from repro.core.types import (BucketGraph, BucketMeta, JoinConfig, JoinResult)
+from repro.store.vector_store import FlatVectorStore
+
+
+def similarity_self_join(store: FlatVectorStore, config: JoinConfig,
+                         workdir: str | None = None,
+                         attribute_mask=None) -> JoinResult:
+    """SSJ over a flat on-disk dataset under a memory budget.
+
+    ``attribute_mask`` (paper §3 extension): (N,) bool predicate results;
+    only pairs where both sides pass are verified/returned.
+    """
+    workdir = workdir or tempfile.mkdtemp(prefix="diskjoin_")
+    os.makedirs(workdir, exist_ok=True)
+    timings: dict[str, float] = {}
+
+    t0 = time.perf_counter()
+    bstore, meta, bt = bucketize(store, os.path.join(workdir, "buckets"),
+                                 config)
+    timings["bucketing"] = time.perf_counter() - t0
+    timings.update({f"bucketing/{k}": v for k, v in bt.items()})
+
+    t0 = time.perf_counter()
+    graph = build_bucket_graph(meta, config)
+    timings["graph"] = time.perf_counter() - t0
+
+    executor = JoinExecutor(bstore, meta, config,
+                            attribute_mask=attribute_mask)
+    result = executor.run(graph)
+    result.timings.update(timings)
+    result.timings["orchestration"] = (result.timings.pop("plan")
+                                       + timings["graph"])
+    return result
+
+
+def similarity_cross_join(store_x: FlatVectorStore, store_y: FlatVectorStore,
+                          config: JoinConfig, workdir: str | None = None,
+                          reorder_larger: bool = True) -> JoinResult:
+    """Cross-join (§3 extension): bipartite graph over two bucketings.
+
+    ``reorder_larger=True`` is the paper's DiskJoin1 (stream the larger
+    dataset in schedule order, cache the smaller); False is DiskJoin2.
+    """
+    workdir = workdir or tempfile.mkdtemp(prefix="diskjoin_x_")
+    os.makedirs(workdir, exist_ok=True)
+
+    big_first = store_x.num_vectors >= store_y.num_vectors
+    if not reorder_larger:
+        big_first = not big_first
+    s_drive, s_cache = ((store_x, store_y) if big_first
+                        else (store_y, store_x))
+    drive_is_x = s_drive is store_x
+
+    cfg_drive = config
+    cfg_cache = config
+    t0 = time.perf_counter()
+    bs_d, meta_d, _ = bucketize(s_drive, os.path.join(workdir, "drive"),
+                                cfg_drive)
+    bs_c, meta_c, _ = bucketize(s_cache, os.path.join(workdir, "cache"),
+                                cfg_cache)
+    bucketing_s = time.perf_counter() - t0
+
+    # bipartite candidate graph: for each drive bucket, candidate cache
+    # buckets by center search + Eq.1 + probabilistic pruning
+    t0 = time.perf_counter()
+    index = make_center_index(meta_c.centers)
+    L = min(config.max_candidates, meta_c.num_buckets)
+    d2, cand = index.search(meta_d.centers, L)
+    dists = np.sqrt(np.maximum(d2, 0.0))
+    eps = float(config.epsilon)
+    dim = meta_d.centers.shape[1]
+    pairs_bg: list[tuple[int, int]] = []
+    for b in range(meta_d.num_buckets):
+        ids, dd = cand[b], dists[b]
+        ok = np.isfinite(dd)
+        ids, dd = ids[ok], dd[ok]
+        tri = dd - meta_d.radii[b] - meta_c.radii[ids] <= eps
+        ids, dd = ids[tri], dd[tri]
+        if config.prune and ids.size:
+            keep = prune_candidates(dd, float(meta_d.radii[b]) + eps, dim,
+                                    config.recall_target,
+                                    cand_radii=meta_c.radii[ids])
+            ids = ids[keep]
+        for j in ids:
+            pairs_bg.append((b, int(j)))
+    graph_s = time.perf_counter() - t0
+
+    # execute: drive buckets streamed in Gorder order; cache side managed by
+    # Belady. We reuse the self-join executor over a *combined* store view by
+    # offsetting cache-bucket ids. Result ids: X in [0, n_x), Y offset by n_x.
+    n_x = store_x.num_vectors
+    combined = _CombinedBipartiteStore(
+        bs_d, bs_c,
+        drive_id_offset=0 if drive_is_x else n_x,
+        cache_id_offset=n_x if drive_is_x else 0)
+    meta = BucketMeta(
+        centers=np.concatenate([meta_d.centers, meta_c.centers]),
+        radii=np.concatenate([meta_d.radii, meta_c.radii]),
+        sizes=np.concatenate([meta_d.sizes, meta_c.sizes]),
+    )
+    off = meta_d.num_buckets
+    edges = np.asarray([(i, off + j) for i, j in pairs_bg], dtype=np.int64)
+    if edges.size == 0:
+        edges = np.zeros((0, 2), dtype=np.int64)
+    graph = BucketGraph(num_nodes=meta.num_buckets, edges=edges)
+
+    executor = _CrossJoinExecutor(combined, meta, config)
+    result = executor.run(graph)
+    result.timings["bucketing"] = bucketing_s
+    result.timings["orchestration"] = result.timings.pop("plan") + graph_s
+    return result
+
+
+class _CombinedBipartiteStore:
+    """Unified bucket-id space over (drive ++ cache) bucketed stores.
+
+    Vector ids are tagged per side (X ids stay < n_x; Y ids offset by n_x)
+    so result pairs are unambiguous.
+    """
+
+    def __init__(self, drive, cache, drive_id_offset: int,
+                 cache_id_offset: int):
+        self.drive = drive
+        self.cache = cache
+        self.dim = drive.dim
+        self.off = drive.num_buckets
+        self._offs = (drive_id_offset, cache_id_offset)
+        self.stats = drive.stats  # JoinExecutor snapshots this; we override
+        self._live = (drive.stats, cache.stats)
+
+    def read_bucket(self, b: int):
+        if b < self.off:
+            vecs, ids = self.drive.read_bucket(b)
+            return vecs, ids + self._offs[0]
+        vecs, ids = self.cache.read_bucket(b - self.off)
+        return vecs, ids + self._offs[1]
+
+    def snapshot_stats(self) -> dict:
+        return self._live[0].merge(self._live[1]).snapshot()
+
+
+class _CrossJoinExecutor(JoinExecutor):
+    """Bipartite execution: intra-bucket self-joins disabled."""
+
+    intra_join = False
+
+    def run(self, graph) -> JoinResult:
+        res = super().run(graph)
+        res.io_stats = self.store.snapshot_stats()
+        return res

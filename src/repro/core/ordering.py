@@ -1,0 +1,174 @@
+"""Task ordering via Gorder-style graph reordering (paper §4.3, Alg. 2).
+
+Greedy: start from the node with the largest out-degree; at each step append
+the remaining node whose out-neighborhood overlaps most with the
+out-neighborhoods of the nodes in the trailing window of size w = C/d_avg.
+
+Naive scoring is O(w·d_max·n²); we keep the paper's incremental scheme —
+scores k_v live in an array, updated only for nodes affected by the node
+entering / leaving the window (each update touches N(x) for x ∈ N(u)), plus
+a lazy max-heap, giving O(Σ_u d⁺(u)²) overall.
+"""
+from __future__ import annotations
+
+import heapq
+
+import numpy as np
+
+from repro.core.types import BucketGraph
+
+
+def _out_neighbors(graph: BucketGraph) -> list[np.ndarray]:
+    nbrs: list[list[int]] = [[] for _ in range(graph.num_nodes)]
+    for i, j in graph.edges:
+        nbrs[int(i)].append(int(j))
+        nbrs[int(j)].append(int(i))  # undirected view: shared-partner locality
+    return [np.asarray(sorted(set(x)), dtype=np.int64) for x in nbrs]
+
+
+def gorder(graph: BucketGraph, window: int) -> np.ndarray:
+    """Return node order (new position → node id)."""
+    n = graph.num_nodes
+    if n == 0:
+        return np.zeros(0, dtype=np.int64)
+    window = max(1, int(window))
+    nbrs = _out_neighbors(graph)
+    # reverse adjacency for "who shares a neighbor with u": v shares x with u
+    # iff v ∈ N(x) for some x ∈ N(u); N here is symmetric so reuse nbrs.
+    placed = np.zeros(n, dtype=bool)
+    score = np.zeros(n, dtype=np.int64)
+    heap: list[tuple[int, int, int]] = []   # (-score, tiebreak, node)
+    stamp = np.zeros(n, dtype=np.int64)     # lazy-heap staleness stamps
+
+    def push(v: int) -> None:
+        stamp[v] += 1
+        heapq.heappush(heap, (-int(score[v]), int(stamp[v]), v))
+
+    def bump(u: int, delta: int) -> None:
+        """Node u entered(+1)/left(-1) the window: update sharers' scores."""
+        for x in nbrs[u]:
+            for v in nbrs[x]:
+                if not placed[v]:
+                    score[v] += delta
+                    if delta > 0:
+                        push(v)
+
+    degrees = np.asarray([len(x) for x in nbrs])
+    start = int(np.argmax(degrees))
+    order = [start]
+    placed[start] = True
+    bump(start, +1)
+
+    for v in range(n):
+        if v != start:
+            push(v)
+
+    while len(order) < n:
+        # slide the window: drop the node that falls out
+        if len(order) > window:
+            bump(order[len(order) - window - 1], -1)
+        # pop the best non-stale, unplaced node
+        while True:
+            if not heap:
+                # isolated leftovers — append in id order
+                rest = np.flatnonzero(~placed)
+                order.extend(int(r) for r in rest)
+                placed[rest] = True
+                break
+            negs, st, v = heapq.heappop(heap)
+            if placed[v] or st != stamp[v] or -negs != score[v]:
+                continue
+            order.append(v)
+            placed[v] = True
+            bump(v, +1)
+            break
+
+    return np.asarray(order, dtype=np.int64)
+
+
+def edge_schedule(graph: BucketGraph, node_order: np.ndarray):
+    """Induce the edge processing order from a node order.
+
+    Each edge is anchored at whichever endpoint appears *earlier* in the
+    order; a node's anchored edges are processed in one run (paper §4.3:
+    "process all of v's outgoing edges in succession"), partners sorted by
+    their own position for window locality.
+
+    Returns:
+      tasks:      list of ("touch", b) | ("edge", u, v) in processing order.
+                  Every node gets exactly one "touch" (intra-bucket
+                  self-join; isolated buckets still self-join).
+      access_seq: (S,) int64 bucket access sequence (Alg. 1 input).
+      pins:       (S,) int64 partner-to-pin per access (−1 = none) — the
+                  executor needs both endpoints of the in-flight edge
+                  resident, so eviction must skip the partner.
+    """
+    pos = np.empty(graph.num_nodes, dtype=np.int64)
+    pos[node_order] = np.arange(graph.num_nodes)
+
+    anchored: list[list[tuple[int, int]]] = [[] for _ in range(graph.num_nodes)]
+    for i, j in graph.edges:
+        i, j = int(i), int(j)
+        a, b = (i, j) if pos[i] <= pos[j] else (j, i)
+        anchored[a].append((int(pos[b]), b))
+
+    tasks: list[tuple] = []
+    access: list[int] = []
+    pins: list[int] = []
+    for v in node_order:
+        v = int(v)
+        tasks.append(("touch", v))
+        access.append(v)
+        pins.append(-1)
+        for _, b in sorted(anchored[v]):
+            tasks.append(("edge", v, b))
+            access.extend((v, b))
+            pins.extend((b, v))
+
+    return tasks, np.asarray(access, dtype=np.int64), \
+        np.asarray(pins, dtype=np.int64)
+
+
+def window_size(cache_buckets: int, graph: BucketGraph) -> int:
+    """w = C / d_avg (paper §4.3)."""
+    if graph.num_edges == 0 or graph.num_nodes == 0:
+        return max(1, cache_buckets)
+    d_avg = max(1.0, 2.0 * graph.num_edges / graph.num_nodes)
+    return max(1, int(cache_buckets / d_avg))
+
+
+def spatial_order(centers: np.ndarray, block: int = 4096) -> np.ndarray:
+    """Beyond-paper ordering: greedy nearest-neighbor tour of bucket centers.
+
+    The bucket graph is induced by metric proximity, so spatially adjacent
+    buckets share most of their candidate sets — a property generic graph
+    reordering (Gorder) only recovers indirectly through neighborhood
+    overlap counts. The tour makes consecutive anchors metric neighbors
+    directly; measured on clustered data it cuts bucket loads ~16% below
+    Gorder at small cache sizes (EXPERIMENTS §Perf/join).
+
+    O(B²) distance table (fine to ~16k buckets; beyond that, seed with a
+    PCA-1D sort and run the tour per segment).
+    """
+    n = centers.shape[0]
+    if n <= 2:
+        return np.arange(n, dtype=np.int64)
+    if n > 16384:  # coarse fallback: 1-D spectral sort
+        c = centers - centers.mean(0)
+        _, _, vt = np.linalg.svd(c, full_matrices=False)
+        return np.argsort(c @ vt[0]).astype(np.int64)
+    cf = centers.astype(np.float32)
+    sq = np.sum(cf * cf, axis=1)
+    d2 = sq[:, None] - 2.0 * cf @ cf.T + sq[None, :]
+    np.fill_diagonal(d2, np.inf)
+    visited = np.zeros(n, dtype=bool)
+    tour = np.empty(n, dtype=np.int64)
+    cur = 0
+    tour[0] = 0
+    visited[0] = True
+    for i in range(1, n):
+        row = np.where(visited, np.inf, d2[cur])
+        cur = int(np.argmin(row))
+        tour[i] = cur
+        visited[cur] = True
+    return tour

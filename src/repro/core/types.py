@@ -1,0 +1,139 @@
+"""Core datatypes for the DiskJoin engine."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinConfig:
+    """Task configuration (paper §3 inputs).
+
+    Attributes:
+      epsilon: distance threshold for similar pairs (L2).
+      recall_target: λ — expected recall of the approximate result.
+      memory_budget_bytes: C — cache memory for resident buckets.
+      num_buckets: number of buckets; paper default ≈ 1‰ of N (Fig. 11).
+      bucket_capacity: pad buckets to this many rows for fixed-shape kernels
+        (TPU adaptation: one compiled kernel, MXU-aligned tiles).
+      eviction_policy: "belady" | "lru" | "fifo" | "lfu" (Fig. 17 ablation).
+      reorder: task reordering on/off (Fig. 17 ablation).
+      order_strategy: "gorder" (paper §4.3) | "spatial" (beyond-paper
+        nearest-neighbor center tour — see ordering.spatial_order).
+      prune: probabilistic candidate-bucket pruning on/off (Fig. 18 ablation).
+      max_candidates: L — nearest centers fetched per bucket before pruning.
+      use_pallas: run the verify kernel through Pallas (interpret on CPU).
+      block_rows: streaming block size (rows) for dataset scans.
+      max_bucket_rows: split buckets above this row count into sub-buckets
+        sharing the center (bounds kernel padding waste under skew).
+      pad_align: bucket row padding alignment (128 = MXU tile; smaller is
+        fine for CPU validation runs).
+      seed: RNG seed for center sampling.
+    """
+
+    epsilon: float
+    recall_target: float = 0.9
+    memory_budget_bytes: int = 64 * 1024 * 1024
+    num_buckets: Optional[int] = None
+    bucket_capacity: Optional[int] = None
+    eviction_policy: str = "belady"
+    reorder: bool = True
+    order_strategy: str = "gorder"
+    prune: bool = True
+    max_candidates: int = 64
+    use_pallas: bool = False
+    block_rows: int = 8192
+    max_bucket_rows: Optional[int] = None
+    pad_align: int = 128
+    seed: int = 0
+
+    def resolve_num_buckets(self, num_vectors: int) -> int:
+        if self.num_buckets is not None:
+            return max(2, min(self.num_buckets, num_vectors))
+        # paper Fig. 11: best at ~1‰ of dataset size
+        return max(2, min(num_vectors // 2, max(16, num_vectors // 1000)))
+
+
+@dataclasses.dataclass
+class BucketMeta:
+    """Per-bucket metadata kept in memory (centers + radii + sizes)."""
+
+    centers: np.ndarray    # (B, d) float32
+    radii: np.ndarray      # (B,) float32 — max dist from member to center
+    sizes: np.ndarray      # (B,) int64
+
+    @property
+    def num_buckets(self) -> int:
+        return self.centers.shape[0]
+
+
+@dataclasses.dataclass
+class BucketGraph:
+    """Directed bucket dependency graph, edges (i, j) with i < j (paper §3)."""
+
+    num_nodes: int
+    edges: np.ndarray            # (E, 2) int64, i < j
+    self_edges_implicit: bool = True  # every bucket checks itself
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.edges.shape[0])
+
+    def adjacency(self) -> list[list[int]]:
+        """Undirected adjacency (orchestration treats G as undirected)."""
+        adj: list[list[int]] = [[] for _ in range(self.num_nodes)]
+        for i, j in self.edges:
+            adj[int(i)].append(int(j))
+            adj[int(j)].append(int(i))
+        return adj
+
+    def out_neighbors(self) -> list[list[int]]:
+        adj: list[list[int]] = [[] for _ in range(self.num_nodes)]
+        for i, j in self.edges:
+            adj[int(i)].append(int(j))
+        return adj
+
+
+@dataclasses.dataclass
+class JoinResult:
+    """Join output + execution telemetry."""
+
+    pairs: np.ndarray                 # (P, 2) int64 original vector ids, a<b
+    distances: np.ndarray             # (P,) float32
+    num_distance_computations: int
+    num_candidate_pairs: int
+    cache_hits: int
+    cache_misses: int
+    bucket_loads: int
+    io_stats: dict
+    timings: dict                     # phase -> seconds
+
+    @property
+    def cache_hit_rate(self) -> float:
+        tot = self.cache_hits + self.cache_misses
+        return self.cache_hits / tot if tot else 0.0
+
+
+def canonicalize_pairs(pairs: np.ndarray) -> np.ndarray:
+    """Sort each pair (a<b), drop self-pairs and duplicates."""
+    if pairs.size == 0:
+        return np.zeros((0, 2), dtype=np.int64)
+    lo = np.minimum(pairs[:, 0], pairs[:, 1])
+    hi = np.maximum(pairs[:, 0], pairs[:, 1])
+    keep = lo != hi
+    stacked = np.stack([lo[keep], hi[keep]], axis=1)
+    return np.unique(stacked, axis=0)
+
+
+def recall(result_pairs: np.ndarray, truth_pairs: np.ndarray) -> float:
+    """Standard recall |R ∩ R'| / |R| over canonicalized pair sets."""
+    truth = canonicalize_pairs(truth_pairs)
+    if truth.shape[0] == 0:
+        return 1.0
+    got = canonicalize_pairs(result_pairs)
+    truth_keys = truth[:, 0].astype(np.int64) << 32 | truth[:, 1].astype(np.int64)
+    got_keys = got[:, 0].astype(np.int64) << 32 | got[:, 1].astype(np.int64)
+    inter = np.intersect1d(truth_keys, got_keys, assume_unique=True)
+    return inter.size / truth_keys.size

@@ -1,0 +1,6 @@
+"""Data substrate: synthetic datasets, resumable pipeline, semantic dedup."""
+from repro.data.synthetic import (brute_force_pairs, clustered_vectors,
+                                  epsilon_for_avg_neighbors, uniform_vectors)
+
+__all__ = ["brute_force_pairs", "clustered_vectors",
+           "epsilon_for_avg_neighbors", "uniform_vectors"]

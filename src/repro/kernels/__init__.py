@@ -1,0 +1,10 @@
+"""Pallas TPU kernels (+ jnp oracles) for the perf-critical hot spots.
+
+- ``pairwise_l2``     — DiskJoin verify step (blocked distance + threshold)
+- ``bucket_assign``   — bucketization scan-2 (fused nearest-center)
+- ``flash_attention`` — LM prefill/serve attention (online softmax)
+
+``ops`` is the only public entry point; ``ref`` holds the pure-jnp oracles
+used by the per-kernel allclose test sweeps.
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel — causal flash attention (online softmax).
+
+Serving/prefill hot loop for the LM substrate. Grid (batch·heads, Sq/bq,
+Skv/bkv); the innermost kv axis streams K/V tiles through VMEM while the
+softmax statistics (running max m, normalizer l) and the output accumulator
+stay resident in VMEM scratch for the whole row of kv steps. Causal blocks
+above the diagonal are skipped via `pl.when` (no FLOPs, no HBM reads —
+Pallas still prefetches the tile, so the win is compute, matching TPU's
+compute-bound attention regime at these widths).
+
+Block defaults (bq, bkv) = (128, 128); q/k/v tiles are (128, hd≤256) f32 →
+≤ 384 KiB VMEM live, MXU-shaped matmuls throughout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BQ = 128
+DEFAULT_BKV = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, nkv: int, bq: int, bkv: int):
+    kv = pl.program_id(2)
+    iq = pl.program_id(1)
+
+    @pl.when(kv == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def _step():
+        q = q_ref[0].astype(jnp.float32)            # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)            # (bkv, hd)
+        v = v_ref[0].astype(jnp.float32)            # (bkv, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bkv)
+        if causal:
+            rows = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+            cols = kv * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        correction = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * correction + jnp.sum(p, axis=1)
+        acc_scr[...] = (acc_scr[...] * correction[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    if causal:
+        # kv blocks strictly above the causal diagonal contribute nothing
+        pl.when(kv * bkv < (iq + 1) * bq)(_step)
+    else:
+        _step()
+
+    @pl.when(kv == nkv - 1)
+    def _final():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "scale", "bq", "bkv",
+                                    "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, scale: float | None = None,
+                    bq: int = DEFAULT_BQ, bkv: int = DEFAULT_BKV,
+                    interpret: bool = False) -> jax.Array:
+    """q: (BH, Sq, hd), k/v: (BH, Skv, hd) → (BH, Sq, hd).
+
+    GQA: callers repeat kv heads to match q heads before flattening BH.
+    Sq % bq == 0 and Skv % bkv == 0 required (pad + mask upstream).
+    """
+    bh, sq, hd = q.shape
+    _, skv, _ = k.shape
+    if scale is None:
+        scale = hd ** -0.5
+    bq = min(bq, sq)
+    bkv = min(bkv, skv)
+    if sq % bq or skv % bkv:
+        raise ValueError(f"seq lens ({sq},{skv}) not divisible by ({bq},{bkv})")
+    nkv = skv // bkv
+    grid = (bh, sq // bq, nkv)
+    kernel = functools.partial(_flash_kernel, scale=float(scale),
+                               causal=causal, nkv=nkv, bq=bq, bkv=bkv)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),      # running max m
+            pltpu.VMEM((bq,), jnp.float32),      # normalizer l
+            pltpu.VMEM((bq, hd), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

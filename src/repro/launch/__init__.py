@@ -1,0 +1,4 @@
+"""Launch layer: production meshes, dry-run, step lowering, roofline."""
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+
+__all__ = ["make_local_mesh", "make_production_mesh"]

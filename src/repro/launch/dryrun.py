@@ -1,0 +1,223 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape) cell, lower + compile the train or
+serve step on the production meshes:
+
+    16×16 ("data","model")           — single pod, 256 chips
+    2×16×16 ("pod","data","model")   — 2 pods, 512 chips
+
+and record memory_analysis(), cost_analysis(), and the collective-op byte
+census parsed from the post-SPMD HLO. Results append incrementally to a
+JSON file so a crashed/timed-out cell never loses prior work.
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma3-4b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
+from repro.launch.hlo_analysis import summarize_cost
+from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import lower_cell
+from repro.models import build_model
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "results", "dryrun.json")
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             fsdp: bool = False, tag: str = "",
+             decode_unroll: bool = False,
+             capacity_data: bool = False,
+             dp_over_model: bool = False,
+             moe_replicated_dispatch: bool = False,
+             moe_a2a: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    rec: dict = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "tag": tag or ("fsdp" if fsdp else "baseline"),
+    }
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        bundle = build_model(cfg, decode_unroll=decode_unroll)
+        extra = {}
+        if capacity_data:
+            extra["capacity"] = (("data", "model") if dp_over_model
+                                 else "data")
+        if dp_over_model:
+            extra["batch"] = ("pod", "data", "model")
+        if moe_replicated_dispatch:
+            extra["moe_tokens"] = ()   # replicate the dispatch payload
+        if moe_a2a:
+            extra["moe_a2a"] = "model"
+        extra = extra or None
+        with mesh:
+            lowered, info = lower_cell(bundle, shape, mesh, fsdp=fsdp,
+                                       extra_rules=extra)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo_text = compiled.as_text()
+            hlo = analyze_hlo(hlo_text)
+            _save_hlo(rec, hlo_text)
+            tokens = (shape.global_batch
+                      if shape.kind == "decode"
+                      else shape.global_batch * shape.seq_len)
+            rec.update(
+                status="ok",
+                step=info["kind"],
+                lower_s=round(t_lower, 1),
+                compile_s=round(t_compile, 1),
+                memory=_mem_dict(mem),
+                xla_cost=summarize_cost(cost),
+                hlo_cost=hlo,              # per-device, trip-count corrected
+                params=cfg.param_count(),
+                active_params=cfg.active_param_count(),
+                tokens=tokens,
+                chips=int(mesh.size),
+            )
+            print(f"[dryrun] {arch} {shape_name} {rec['mesh']}: "
+                  f"mem/dev={rec['memory'].get('bytes_per_device', 0):,} "
+                  f"flops/dev={hlo['flops']:.3e} "
+                  f"coll/dev={hlo['collective_traffic_bytes']:.3e}B")
+    except Exception as e:  # record the failure — these are bugs to fix
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        print(f"[dryrun] {arch} {shape_name} FAILED: {e}")
+    rec["elapsed_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def _save_hlo(rec: dict, text: str) -> None:
+    """Persist the post-SPMD HLO so metric refinements replay without
+    recompiling (results/hlo/<arch>__<shape>__<mesh>__<tag>.txt.gz)."""
+    import gzip
+    d = os.path.join(os.path.dirname(RESULTS), "hlo")
+    os.makedirs(d, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}__{rec['tag']}"
+    with gzip.open(os.path.join(d, name + ".txt.gz"), "wt") as f:
+        f.write(text)
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for field in ("temp_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+        try:
+            out[field] = int(getattr(mem, field))
+        except Exception:
+            pass
+    if out:
+        live = (out.get("argument_size_in_bytes", 0)
+                + out.get("temp_size_in_bytes", 0)
+                + out.get("output_size_in_bytes", 0)
+                - out.get("alias_size_in_bytes", 0))
+        # memory_analysis reports whole-program sizes; arguments/outputs are
+        # sharded across devices, temps are per-device already on CPU AOT
+        out["bytes_per_device"] = live
+    return out
+
+
+def load_results() -> list[dict]:
+    if os.path.exists(RESULTS):
+        with open(RESULTS) as f:
+            return json.load(f)
+    return []
+
+
+def append_result(rec: dict) -> None:
+    os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
+    rows = load_results()
+    rows = [r for r in rows
+            if not (r["arch"] == rec["arch"] and r["shape"] == rec["shape"]
+                    and r["mesh"] == rec["mesh"]
+                    and r.get("tag") == rec.get("tag"))]
+    rows.append(rec)
+    tmp = RESULTS + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(rows, f, indent=1)
+    os.replace(tmp, RESULTS)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--decode-unroll", action="store_true")
+    ap.add_argument("--capacity-data", action="store_true",
+                    help="shard MoE dispatch capacity over the data axis")
+    ap.add_argument("--dp-over-model", action="store_true",
+                    help="batch also sharded over the model axis "
+                         "(pure-DP + ZeRO-3 when combined with --fsdp)")
+    ap.add_argument("--moe-replicated-dispatch", action="store_true",
+                    help="all-gather token payload before expert scatter")
+    ap.add_argument("--moe-a2a", action="store_true",
+                    help="shard_map all-to-all expert-parallel dispatch")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells already recorded ok/skipped")
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells.append((args.arch, args.shape))
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+    done = set()
+    if args.resume:
+        for r in load_results():
+            if r.get("status") in ("ok", "skipped"):
+                done.add((r["arch"], r["shape"], r["mesh"],
+                          r.get("tag", "baseline")))
+    for arch, shape in cells:
+        for mp in meshes:
+            key = (arch, shape, "2x16x16" if mp else "16x16",
+                   args.tag or ("fsdp" if args.fsdp else "baseline"))
+            if key in done:
+                continue
+            rec = run_cell(arch, shape, mp, fsdp=args.fsdp, tag=args.tag,
+                           decode_unroll=args.decode_unroll,
+                           capacity_data=args.capacity_data,
+                           dp_over_model=args.dp_over_model,
+                           moe_replicated_dispatch=(
+                               args.moe_replicated_dispatch),
+                           moe_a2a=args.moe_a2a)
+            append_result(rec)
+
+
+if __name__ == "__main__":
+    main()

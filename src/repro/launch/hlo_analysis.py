@@ -1,0 +1,109 @@
+"""Post-SPMD HLO analysis: collective byte census + cost summaries.
+
+``collective_bytes`` parses ``compiled.as_text()`` and sums, per collective
+kind, the bytes each op moves per device. Traffic model (documented — the
+roofline's collective term divides by per-link bandwidth):
+
+  all-gather        : output bytes × (n−1)/n     (ring; ≈ output bytes)
+  reduce-scatter    : input  bytes × (n−1)/n
+  all-reduce        : 2 × bytes × (n−1)/n        (reduce-scatter + all-gather)
+  all-to-all        : bytes × (n−1)/n
+  collective-permute: bytes                      (point-to-point)
+
+Shapes are parsed from the HLO result type; replica-group count n is parsed
+per op when present (fallback: the full partition count).
+"""
+from __future__ import annotations
+
+import math
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_ARR_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_ARR_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("},{")[0]
+        return max(1, first.count(",") + 1)
+    return default
+
+
+def collective_bytes(hlo_text: str, default_group: int = 256) -> dict:
+    """→ {kind: {'count', 'bytes', 'traffic_bytes'}, 'total_traffic_bytes'}."""
+    out: dict = {k: {"count": 0, "bytes": 0, "traffic_bytes": 0}
+                 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)", ls)
+        if not m:
+            continue
+        opname = m.group(2)
+        kind = None
+        for c in _COLLECTIVES:
+            if opname == c or opname.startswith(c + "-start") or \
+                    opname.startswith(c + "."):
+                kind = c
+                break
+        if kind is None:
+            continue
+        nbytes = _shape_bytes(m.group(1))
+        n = _group_size(ls, default_group)
+        frac = (n - 1) / n if n > 1 else 0.0
+        if kind == "all-reduce":
+            traffic = 2 * nbytes * frac
+        elif kind == "collective-permute":
+            traffic = nbytes
+        else:
+            traffic = nbytes * frac
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += nbytes
+        out[kind]["traffic_bytes"] += int(traffic)
+    out["total_traffic_bytes"] = int(
+        sum(v["traffic_bytes"] for k, v in out.items()
+            if isinstance(v, dict)))
+    return out
+
+
+def summarize_cost(cost) -> dict:
+    """Normalize compiled.cost_analysis() across jax versions."""
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    out = {}
+    for k in ("flops", "bytes accessed", "transcendentals",
+              "optimal_seconds"):
+        if k in cost:
+            out[k.replace(" ", "_")] = float(cost[k])
+    # per-memory-space byte entries
+    for k, v in cost.items():
+        if isinstance(k, str) and k.startswith("bytes accessed"):
+            out[k.replace(" ", "_")] = float(v)
+    return out

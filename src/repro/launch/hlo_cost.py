@@ -1,0 +1,298 @@
+"""HLO-text cost pass with loop-trip-count multiplication.
+
+XLA's HloCostAnalysis (surfaced via ``compiled.cost_analysis()``) counts
+each while-loop body ONCE — with scan-over-layers and chunked attention
+that undercounts FLOPs by the full layer count. The optimized HLO, however,
+carries ``backend_config={"known_trip_count":{"n":...}}`` on while ops and
+names their body computations, so this module re-derives per-device totals
+by walking the call graph:
+
+  total(comp) = local(comp) + Σ_callsite total(callee) × trip_multiplier
+
+Counted per computation:
+  * dot/convolution FLOPs (2 × |result| × contraction size),
+  * HBM-boundary bytes: operands + results of fusions, dots, copies,
+    parameters/constants feeding the entry (an *estimate* of traffic at
+    fusion boundaries — the roofline memory term's numerator),
+  * collective bytes by kind (ring-model traffic, see hlo_analysis).
+
+This is structural analysis of the compiled artifact — the "profile" the
+perf loop iterates on (no real TPU in this container).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[\w\[\],{}]+))\s+"
+    r"([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\([^)]*\)\s*->")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_CALL_SINGLE_RE = re.compile(
+    r"(?:calls|body|condition|to_apply)=%([\w.\-]+)")
+_CALL_LIST_RE = re.compile(
+    r"(?:calls|branch_computations)=\{([^}]*)\}")
+_GROUPS_ARR_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+
+
+def _parse_shapes(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        out.append((dtype,
+                    [int(d) for d in dims.split(",") if d] if dims else []))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    return sum(_DTYPE_BYTES[dt] * (math.prod(dims) if dims else 1)
+               for dt, dims in _parse_shapes(type_str))
+
+
+def _shape_elems(type_str: str) -> int:
+    return sum(math.prod(dims) if dims else 1
+               for _, dims in _parse_shapes(type_str))
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    kind: str
+    result_type: str
+    line: str
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes_lo: float = 0.0
+    bytes_hi: float = 0.0
+    region_bytes_lo: float = 0.0   # ops inside jax.named_scope regions
+    region_flops: float = 0.0      # tagged "flash_attn_region"
+    collective: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    calls: list = dataclasses.field(default_factory=list)
+    # calls: (callee_name, multiplier)
+
+
+def _split_computations(text: str) -> dict[str, list[str]]:
+    """Computation headers start at column 0: ``[ENTRY] %name (...) -> ... {``
+    (parameter lists may contain nested parens — match structurally)."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        if (line and not line[0].isspace() and "->" in line
+                and line.rstrip().endswith("{")):
+            tok = line.split()[0]
+            if tok == "ENTRY":
+                tok = line.split()[1]
+            cur = tok.lstrip("%")
+            comps[cur] = []
+        elif cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def _dot_flops(line: str, result_type: str,
+               shapes: dict[str, str]) -> float:
+    operands = re.findall(r"\(([^)]*)\)", line)
+    args = re.match(r".*?=\s*\S+\s+[\w\-]+\(([^)]*)\)", line)
+    contract = 1
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    if m and args:
+        lhs_name = args.group(1).split(",")[0].strip().lstrip("%")
+        lhs_type = shapes.get(lhs_name, "")
+        parsed = _parse_shapes(lhs_type)
+        if parsed:
+            dims = parsed[0][1]
+            for di in m.group(1).split(","):
+                if di and int(di) < len(dims):
+                    contract *= dims[int(di)]
+    del operands
+    return 2.0 * _shape_elems(result_type) * contract
+
+
+def _conv_flops(line: str, result_type: str, shapes: dict[str, str]) -> float:
+    args = re.match(r".*?=\s*\S+\s+[\w\-]+\(([^)]*)\)", line)
+    kernel_elems = 1
+    if args:
+        names = [a.strip().lstrip("%") for a in args.group(1).split(",")]
+        if len(names) >= 2:
+            parsed = _parse_shapes(shapes.get(names[1], ""))
+            if parsed:
+                kernel_elems = math.prod(parsed[0][1] or [1])
+    return 2.0 * _shape_elems(result_type) * max(1, kernel_elems // 1)
+
+
+def _collective_traffic(kind: str, nbytes: int, line: str,
+                        default_group: int) -> float:
+    n = default_group
+    m = _GROUPS_ARR_RE.search(line)
+    if m:
+        n = int(m.group(2))
+    else:
+        m = _GROUPS_RE.search(line)
+        if m:
+            first = m.group(1).split("},{")[0]
+            n = max(1, first.count(",") + 1)
+    frac = (n - 1) / n if n > 1 else 0.0
+    if kind == "all-reduce":
+        return 2 * nbytes * frac
+    if kind == "collective-permute":
+        return float(nbytes)
+    return nbytes * frac
+
+
+# bytes_lo: traffic that survives even perfect fusion — matmul operand
+# streaming, data-movement ops, collectives. bytes_hi adds every elementwise
+# /layout op at CPU-HLO fusion granularity (an upper bound: the TPU compiler
+# fuses most of these chains). The roofline memory term is reported as the
+# [lo, hi] bracket; see EXPERIMENTS §Roofline.
+_BYTES_LO_OPS = {"dot", "convolution", "copy", "gather", "scatter",
+                 "dynamic-update-slice", "dynamic-slice", "all-gather",
+                 "all-reduce", "reduce-scatter", "all-to-all",
+                 "collective-permute", "sort"}
+_BYTES_HI_EXTRA = {"fusion", "reduce", "transpose", "broadcast",
+                   "concatenate", "slice", "pad", "select-and-scatter",
+                   "reduce-window", "iota", "reverse", "exponential",
+                   "add", "multiply", "subtract", "divide", "select",
+                   "compare", "convert", "maximum", "minimum", "tanh",
+                   "rsqrt", "sqrt", "log", "negate", "power", "and", "or"}
+
+
+def analyze_hlo(text: str, default_group: int = 256) -> dict:
+    comps = _split_computations(text)
+    costs: dict[str, CompCost] = {}
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            entry = line.split()[1].lstrip("%")
+
+    for cname, lines in comps.items():
+        cost = CompCost()
+        shapes: dict[str, str] = {}
+        for line in lines:
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            opname, rtype, kind = m.groups()
+            shapes[opname] = rtype
+            in_region = "flash_attn_region" in line
+            if kind == "dot":
+                f = _dot_flops(line, rtype, shapes)
+                cost.flops += f
+                if in_region:
+                    cost.region_flops += f
+            elif kind == "convolution":
+                cost.flops += _conv_flops(line, rtype, shapes)
+            for c in _COLLECTIVES:
+                if kind == c or kind.startswith(c + "-start"):
+                    nb = _shape_bytes(rtype)
+                    cost.collective[c] += _collective_traffic(
+                        c, nb, line, default_group)
+                    cost.collective[c + "__count"] += 1
+            in_lo = kind in _BYTES_LO_OPS
+            in_hi = in_lo or kind in _BYTES_HI_EXTRA
+            if in_hi:
+                nb = _shape_bytes(rtype)
+                ob = 0
+                args = re.match(r".*?=\s*\S+\s+[\w\-]+\(([^)]*)\)", line)
+                if args:
+                    for a in args.group(1).split(","):
+                        a = a.strip().lstrip("%")
+                        if a in shapes:
+                            ob += _shape_bytes(shapes[a])
+                if kind == "dynamic-update-slice":
+                    # in-place DUS: traffic = update read + update write,
+                    # not the whole buffer (XLA aliases the operand)
+                    upd = 0
+                    if args:
+                        names = [a.strip().lstrip("%")
+                                 for a in args.group(1).split(",")]
+                        if len(names) >= 2 and names[1] in shapes:
+                            upd = _shape_bytes(shapes[names[1]])
+                    total = 2 * upd if upd else nb
+                elif kind == "dynamic-slice":
+                    total = 2 * nb
+                else:
+                    total = nb + ob
+                if in_lo:
+                    cost.bytes_lo += total
+                    if in_region:
+                        cost.region_bytes_lo += total
+                cost.bytes_hi += total
+            # call edges
+            trip = 1
+            tm = _TRIP_RE.search(line)
+            if tm:
+                trip = int(tm.group(1))
+            callees = set(_CALL_SINGLE_RE.findall(line))
+            for cm in _CALL_LIST_RE.finditer(line):
+                for c_ in cm.group(1).split(","):
+                    callees.add(c_.strip().lstrip("%"))
+            for callee in callees:
+                if callee in comps:
+                    mult = trip if kind == "while" else 1
+                    cost.calls.append((callee, mult))
+        costs[cname] = cost
+
+    memo: dict[str, tuple] = {}
+
+    def total(cname: str, depth=0):
+        if cname in memo:
+            return memo[cname]
+        if depth > 64:
+            return 0.0, 0.0, 0.0, 0.0, 0.0, {}
+        c = costs.get(cname)
+        if c is None:
+            return 0.0, 0.0, 0.0, 0.0, 0.0, {}
+        f, blo, bhi = c.flops, c.bytes_lo, c.bytes_hi
+        rb, rf = c.region_bytes_lo, c.region_flops
+        coll = dict(c.collective)
+        for callee, mult in c.calls:
+            cf, clo, chi, crb, crf, cc = total(callee, depth + 1)
+            f += cf * mult
+            blo += clo * mult
+            bhi += chi * mult
+            rb += crb * mult
+            rf += crf * mult
+            for k, v in cc.items():
+                coll[k] = coll.get(k, 0.0) + v * mult
+        memo[cname] = (f, blo, bhi, rb, rf, coll)
+        return memo[cname]
+
+    if entry is None:
+        return {"flops": 0, "bytes_lo": 0, "bytes_hi": 0, "collectives": {}}
+    f, blo, bhi, rb, rf, coll = total(entry)
+    per_kind = {k: v for k, v in coll.items() if not k.endswith("__count")}
+    counts = {k[:-7]: int(v) for k, v in coll.items()
+              if k.endswith("__count")}
+    return {
+        "flops": f,
+        "bytes_lo": blo,
+        "bytes_hi": bhi,
+        "bytes": blo,  # back-compat alias: the defensible floor
+        "flash_region_bytes_lo": rb,
+        "flash_region_flops": rf,
+        "collective_traffic_bytes": float(sum(per_kind.values())),
+        "collectives": per_kind,
+        "collective_counts": counts,
+    }

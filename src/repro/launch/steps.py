@@ -1,0 +1,180 @@
+"""Lowerable step functions + their sharding trees.
+
+``make_train_step``: loss → grads → AdamW update, one jit-able function.
+``make_serve_step``: one decode step against the full KV/state cache.
+``sharding trees``: params by path pattern, batch/caches by logical axes,
+with the decode-time ``cache_seq`` override (sequence-sharded flash-decode,
+DESIGN §5).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.dist import sharding as shd
+from repro.models import encdec
+from repro.models.model_api import ModelBundle
+from repro.train.optimizer import AdamW, AdamWConfig
+
+
+def make_train_step(bundle: ModelBundle, opt: AdamW):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            bundle.loss, has_aux=True)(params, batch)
+        new_params, new_state, opt_metrics = opt.update(grads, opt_state,
+                                                        params)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_serve_step(bundle: ModelBundle):
+    def serve_step(params, caches, tokens):
+        logits, new_caches = bundle.decode(params, tokens, caches)
+        return logits, new_caches
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# sharding trees
+# ---------------------------------------------------------------------------
+def batch_shardings(mesh, specs: dict) -> dict:
+    out = {}
+    for k, v in specs.items():
+        if k in ("tokens", "labels"):
+            axes = ["batch"] + [None] * (len(v.shape) - 1)
+        elif k in ("patches", "frames"):
+            axes = ["batch", None, None]
+        else:
+            axes = [None] * len(v.shape)
+        out[k] = shd.logical_spec(mesh, v.shape, *axes)
+    return out
+
+
+def cache_shardings(mesh, cache_tree):
+    """Logical axes per cache leaf, keyed on path names."""
+    def one(path, leaf):
+        pstr = "/".join(shd._key_str(k) for k in path)
+        shape = leaf.shape
+        nd = len(shape)
+        if "cross_k" in pstr or "cross_v" in pstr:
+            axes = ["batch", None, "kv_heads", None]      # (B, F, H, D)
+        elif pstr.endswith("/k") or pstr.endswith("/v"):
+            axes = ["batch", "cache_seq", "kv_heads", None]
+        elif pstr.endswith("kpos") or pstr.endswith("pos"):
+            axes = []
+        elif pstr.endswith("state") and nd >= 4:
+            axes = ["batch", "mlp", None, None]           # ssm (B,H,P,N)
+        elif pstr.endswith("state"):
+            axes = ["batch", "mlp"]                       # rglru (B,W)
+        elif pstr.endswith("conv"):
+            axes = ["batch", None, "mlp"]
+        else:
+            axes = []
+        full = [None] * (nd - len(axes)) + axes           # stacked dims lead
+        return shd.logical_spec(mesh, shape, *full)
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def opt_state_shardings(mesh, opt_state, params_shardings):
+    def like_params(tree):
+        return jax.tree_util.tree_map(lambda s: s, params_shardings)
+
+    out = {"mu": _retype(params_shardings),
+           "nu": _retype(params_shardings),
+           "step": NamedSharding(mesh, P())}
+    if "error" in opt_state:
+        out["error"] = _retype(params_shardings)
+    return out
+
+
+def _retype(tree):
+    return jax.tree_util.tree_map(lambda s: s, tree)
+
+
+# ---------------------------------------------------------------------------
+# full lowering helper (used by dryrun + launcher)
+# ---------------------------------------------------------------------------
+def lower_cell(bundle: ModelBundle, shape: ShapeSpec, mesh,
+               *, fsdp: bool = False, remat: bool = True,
+               donate: bool = True, extra_rules: Optional[dict] = None):
+    """Lower train_step or serve_step for (arch × shape) on ``mesh``.
+
+    Returns (lowered, aux_info). Uses ShapeDtypeStructs throughout — no
+    device allocation.
+    """
+    cfg = bundle.cfg
+    rules = {}
+    if shape.kind == "decode":
+        rules["cache_seq"] = (("data", "model") if shape.global_batch == 1
+                              else ("model",))
+    if extra_rules:
+        rules.update(extra_rules)
+    with shd.axis_rules(**rules):
+        shd.set_mesh(mesh)
+        try:
+            params_shapes = jax.eval_shape(
+                bundle.init, jax.random.PRNGKey(0))
+            p_shards = shd.param_shardings(params_shapes, mesh, fsdp=fsdp)
+            specs = bundle.input_specs(shape)
+            b_shards = batch_shardings(mesh, specs)
+
+            if shape.kind == "train":
+                opt = AdamW(AdamWConfig())
+                opt_shapes = jax.eval_shape(opt.init, params_shapes)
+                o_shards = opt_state_shardings(mesh, opt_shapes, p_shards)
+                step = make_train_step(bundle, opt)
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(p_shards, o_shards, b_shards),
+                    out_shardings=(p_shards, o_shards, None),
+                    donate_argnums=(0, 1) if donate else ())
+                lowered = jitted.lower(params_shapes, opt_shapes, specs)
+                return lowered, {"kind": "train_step"}
+
+            if shape.kind == "prefill":
+                jitted = jax.jit(bundle.prefill,
+                                 in_shardings=(p_shards, b_shards))
+                lowered = jitted.lower(params_shapes, specs)
+                return lowered, {"kind": "prefill_step"}
+
+            # decode
+            cache_shapes = _cache_shapes(bundle, shape)
+            c_shards = cache_shardings(mesh, cache_shapes)
+            tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+            t_shard = shd.logical_spec(mesh, tok.shape, "batch", None)
+            step = make_serve_step(bundle)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shards, c_shards, t_shard),
+                out_shardings=(None, c_shards),
+                donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(params_shapes, cache_shapes, tok)
+            return lowered, {"kind": "serve_step"}
+        finally:
+            shd.set_mesh(None)
+
+
+def _cache_shapes(bundle: ModelBundle, shape: ShapeSpec):
+    cfg = bundle.cfg
+    b = shape.global_batch
+    if cfg.enc_dec:
+        return jax.eval_shape(functools.partial(
+            _encdec_cache, bundle, b, shape.seq_len))
+    return jax.eval_shape(functools.partial(
+        bundle.init_cache, b, shape.seq_len))
+
+
+def _encdec_cache(bundle: ModelBundle, batch: int, max_seq: int):
+    from repro.models.model_api import _encdec_cache_eval
+    return _encdec_cache_eval(bundle, batch, max_seq)

@@ -1,0 +1,61 @@
+"""Production launcher: --arch/--shape selection, mesh setup, training or
+serving with checkpointing (the `repro.launch` CLI).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke
+    PYTHONPATH=src python -m repro.launch.train --arch olmoe-1b-7b \
+        --steps 100 --ckpt /tmp/ckpt
+
+Full-size archs on this CPU container are only *lowered* (see dryrun.py);
+--smoke trains the reduced config end-to-end.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import get_config, list_archs, smoke_config
+from repro.launch.mesh import make_local_mesh
+from repro.train import AdamWConfig, TrainConfig, train
+from repro.train.grad_compress import make_int8_compressor
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU end-to-end)")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--global-batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--compress-grads", action="store_true",
+                    help="int8 gradient compression w/ error feedback")
+    ap.add_argument("--model-axis", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    mesh = None
+    if args.model_axis > 1:
+        mesh = make_local_mesh(model_axis=args.model_axis)
+
+    out = train(
+        cfg,
+        TrainConfig(
+            steps=args.steps, log_every=max(1, args.steps // 20),
+            checkpoint_every=max(2, args.steps // 4),
+            checkpoint_dir=args.ckpt,
+            global_batch=args.global_batch, seq_len=args.seq_len,
+            optimizer=AdamWConfig(learning_rate=args.lr,
+                                  warmup_steps=max(1, args.steps // 10),
+                                  total_steps=args.steps)),
+        mesh=mesh,
+        grad_transform=(make_int8_compressor() if args.compress_grads
+                        else None))
+    print(f"done: final_loss={out['final_loss']:.4f} "
+          f"mean_step={out['mean_step_ms']:.0f}ms")
+
+
+if __name__ == "__main__":
+    main()

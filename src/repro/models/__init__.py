@@ -1,0 +1,4 @@
+"""Model zoo: composable decoder LM (dense/MoE/SSM/hybrid/VLM) + enc-dec."""
+from repro.models.model_api import ModelBundle, build_model, cache_specs
+
+__all__ = ["ModelBundle", "build_model", "cache_specs"]

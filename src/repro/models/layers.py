@@ -1,0 +1,250 @@
+"""Shared transformer layers: norms, RoPE, SwiGLU MLP, GQA attention.
+
+All layers are pure functions over explicit param dicts (init_* returns the
+params; apply is the function). Dtypes: params in ``cfg.param_dtype``,
+activations kept in the same dtype with f32 softmax/norm internals.
+Activations carry logical-axis annotations via ``repro.dist.shard``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import shard
+
+
+def dtype_of(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jax.Array:
+    scale = 1.0 / np.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jax.Array:
+    # std d^-0.5: unit-variance inputs after the sqrt(d) embedding scale,
+    # and O(1) logits through the tied head
+    return (jax.random.normal(key, (vocab, dim), jnp.float32)
+            / np.sqrt(dim)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def init_rmsnorm(dim: int, dtype) -> dict:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + params["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard / half-dim "2d" GLM style)
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float, rope_dim: int) -> jax.Array:
+    exponent = jnp.arange(0, rope_dim, 2, dtype=jnp.float32) / rope_dim
+    return 1.0 / (theta ** exponent)                       # (rope_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               mode: str = "full") -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    if mode == "none":
+        return x
+    d = x.shape[-1]
+    rope_dim = d if mode == "full" else d // 2
+    freqs = rope_freqs(d, theta, rope_dim)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, rd/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    xr = x[..., :rope_dim].astype(jnp.float32)
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    if rope_dim == d:
+        return rotated
+    return jnp.concatenate([rotated, x[..., rope_dim:]], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp(params: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    h = shard(h, "batch", "seq", "mlp")
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (full / sliding-window), chunked-flash for long sequences
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class AttnDims:
+    n_heads: int
+    n_kv: int
+    head_dim: int
+
+
+def init_attention(key, cfg: ArchConfig, cross: bool = False) -> dict:
+    d = cfg.d_model
+    hd = cfg.head_dim
+    dtype = dtype_of(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, d, cfg.n_heads * hd, dtype),
+        "wk": dense_init(k2, d, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(k3, d, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(k4, cfg.n_heads * hd, d, dtype),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = init_rmsnorm(hd, dtype)
+        p["k_norm"] = init_rmsnorm(hd, dtype)
+    return p
+
+
+def _split_heads(x: jax.Array, n: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, -1)
+
+
+def gqa_scores_chunked(q: jax.Array, k: jax.Array, v: jax.Array,
+                       *, causal: bool, window: int = 0,
+                       q_offset=0, kv_positions: Optional[jax.Array] = None,
+                       q_chunk: int = 1024) -> jax.Array:
+    """Memory-bounded attention: scan over query chunks.
+
+    q: (B, Sq, H, D); k/v: (B, Skv, Hkv, D). GQA via grouped einsum — kv
+    heads are never materialized repeated. ``window > 0`` restricts each
+    query to the trailing ``window`` keys (sliding-window local attention).
+    ``q_offset`` is the absolute position of q[0] (decode / chunked
+    prefill); ``kv_positions`` gives absolute key positions (rolling decode
+    caches; −1 marks empty slots).
+    """
+    b, sq, h, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = h // hkv
+    scale = d ** -0.5
+    qg = q.reshape(b, sq, hkv, g, d)
+    q_chunk = min(q_chunk, sq)
+    n_chunks = sq // q_chunk if sq % q_chunk == 0 else -(-sq // q_chunk)
+
+    kv_pos = jnp.arange(skv) if kv_positions is None else kv_positions
+
+    def one_chunk(ci):
+        # named scope: the HLO census attributes this region's traffic so
+        # the roofline can model its replacement by the Pallas flash kernel
+        # (kernels/flash_attention.py — VMEM-resident score tiles)
+        with jax.named_scope("flash_attn_region"):
+            start = ci * q_chunk
+            qc = jax.lax.dynamic_slice_in_dim(qg, start, q_chunk, axis=1)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qc.astype(jnp.float32),
+                           k.astype(jnp.float32)) * scale
+            q_pos = q_offset + start + jnp.arange(q_chunk)
+            mask = kv_pos[None, :] >= 0
+            if causal:
+                mask &= q_pos[:, None] >= kv_pos[None, :]
+            if window > 0:
+                mask &= kv_pos[None, :] > q_pos[:, None] - window
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            p = jax.nn.softmax(s, axis=-1)
+            return jnp.einsum("bkgqs,bskd->bqkgd", p,
+                              v.astype(jnp.float32)).astype(q.dtype)
+
+    if n_chunks == 1:
+        out = one_chunk(0)
+    else:
+        outs = jax.lax.map(one_chunk, jnp.arange(n_chunks))
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, n_chunks * q_chunk,
+                                               hkv, g, d)[:, :sq]
+    return out.reshape(b, sq, h, d)
+
+
+def attention(params: dict, cfg: ArchConfig, x: jax.Array,
+              positions: jax.Array, *, kind: str = "global",
+              kv_x: Optional[jax.Array] = None,
+              cache: Optional[dict] = None,
+              rope: bool = True) -> tuple[jax.Array, Optional[dict]]:
+    """Self/cross attention with optional KV cache (decode).
+
+    cache: {"k": (B, S_max, Hkv, D), "v": ..., "pos": scalar int32} —
+    functional update returned alongside the output.
+    """
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = _split_heads(x @ params["wq"], cfg.n_heads)
+    src = x if kv_x is None else kv_x
+    k = _split_heads(src @ params["wk"], cfg.n_kv_heads)
+    v = _split_heads(src @ params["wv"], cfg.n_kv_heads)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+
+    if "q_norm" in params:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+
+    causal = kv_x is None
+    window = cfg.window if kind == "local" else 0
+    new_cache = None
+    if cache is not None and kv_x is None:
+        pos0 = cache["pos"]
+        if rope and cfg.rope_mode != "none":
+            q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_mode)
+            k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_mode)
+        steps = cache["k"].shape[1]
+        idx = (pos0 + jnp.arange(s)) % steps   # rolling for local windows
+        ck = cache["k"].at[:, idx].set(k.astype(cache["k"].dtype))
+        cv = cache["v"].at[:, idx].set(v.astype(cache["v"].dtype))
+        kpos = cache["kpos"].at[idx].set(pos0 + jnp.arange(s))
+        ck = shard(ck, "batch", "cache_seq", "kv_heads", None)
+        cv = shard(cv, "batch", "cache_seq", "kv_heads", None)
+        new_cache = {"k": ck, "v": cv, "kpos": kpos, "pos": pos0 + s}
+        out = gqa_scores_chunked(q, ck, cv, causal=True, window=window,
+                                 q_offset=pos0, kv_positions=kpos)
+    else:
+        if rope and kv_x is None and cfg.rope_mode != "none":
+            q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_mode)
+            k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_mode)
+        out = gqa_scores_chunked(q, k, v, causal=causal, window=window)
+
+    out = shard(out, "batch", "seq", "heads", None)
+    y = out.reshape(b, s, cfg.n_heads * hd) @ params["wo"]
+    return shard(y, "batch", "seq", "embed"), new_cache
+
+
+def init_attn_cache(cfg: ArchConfig, batch: int, max_seq: int,
+                    kind: str = "global", dtype=None) -> dict:
+    """Decode cache. Local layers only keep a rolling window — the 500k
+    decode's memory win for sliding-window archs (DESIGN §4)."""
+    dtype = dtype or dtype_of(cfg)
+    steps = min(max_seq, cfg.window) if kind == "local" else max_seq
+    return {
+        "k": jnp.zeros((batch, steps, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, steps, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "kpos": jnp.full((steps,), -1, jnp.int32),
+        "pos": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,222 @@
+"""Model API: uniform init / loss / decode across all assigned archs.
+
+``build_model(cfg)`` returns a ``ModelBundle`` whose members are pure
+functions suitable for jit/pjit lowering:
+
+  init(rng)                          → params
+  loss(params, batch)                → (scalar loss, metrics dict)
+  init_cache(batch, max_seq)         → decode caches
+  decode(params, tokens, caches)     → (logits (B, V), new caches)
+  input_specs(shape)                 → ShapeDtypeStruct batch stand-ins
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.dist.sharding import shard
+from repro.models import encdec, transformer
+
+
+# ---------------------------------------------------------------------------
+# loss: chunked cross-entropy (vocab logits never fully materialized)
+# ---------------------------------------------------------------------------
+def chunked_xent(hidden: jax.Array, table: jax.Array, labels: jax.Array,
+                 chunk: int = 2048) -> jax.Array:
+    """hidden (B,S,d) × table (V,d) × labels (B,S) → mean NLL.
+
+    Scans over sequence chunks so the (tokens, vocab) logits tensor exists
+    only one chunk at a time — with 262k vocabs the full tensor would be
+    ~10× the activation footprint of the whole backbone.
+    """
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        pad = chunk - s % chunk
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        s = s + pad
+    n_chunks = s // chunk
+    hidden = hidden.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)
+    labels = labels.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        h, y = xs
+        logits = jnp.einsum("bcd,vd->bcv", h.astype(jnp.float32),
+                            table.astype(jnp.float32))
+        logits = shard(logits, "batch", "seq", "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(y, 0)[..., None], axis=-1)[..., 0]
+        valid = (y >= 0).astype(jnp.float32)
+        nll = (lse - gold) * valid
+        return (tot + nll.sum(), cnt + valid.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 (hidden, labels))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    cfg: ArchConfig
+    init: Callable
+    loss: Callable
+    init_cache: Callable
+    decode: Callable
+    input_specs: Callable
+    prefill: Callable = None  # forward-only: batch → last-token logits
+
+
+def build_model(cfg: ArchConfig, *, decode_unroll: bool = False
+                ) -> ModelBundle:
+    if cfg.enc_dec:
+        return _build_encdec(cfg)
+    return _build_lm(cfg, decode_unroll=decode_unroll)
+
+
+# ---------------------------------------------------------------------------
+# decoder-only families (dense / moe / ssm / hybrid / vlm)
+# ---------------------------------------------------------------------------
+def _build_lm(cfg: ArchConfig, decode_unroll: bool = False) -> ModelBundle:
+    is_vlm = cfg.family == "vlm"
+
+    def init(rng):
+        return transformer.init_lm(rng, cfg)
+
+    def loss(params, batch):
+        patches = batch.get("patches") if is_vlm else None
+        hidden, aux = transformer.forward(params, cfg, batch["tokens"],
+                                          patch_embeds=patches)
+        if is_vlm:  # loss only over the token suffix
+            hidden = hidden[:, patches.shape[1]:]
+        nll = chunked_xent(hidden[:, :-1], params["embed"]["table"],
+                           batch["labels"][:, 1:])
+        return nll + aux, {"nll": nll, "aux": aux}
+
+    def init_cache(batch, max_seq):
+        return transformer.init_cache(cfg, batch, max_seq)
+
+    def decode(params, tokens, caches):
+        return transformer.decode_step(params, cfg, tokens, caches,
+                                       unroll=decode_unroll)
+
+    def prefill(params, batch):
+        """Inference prefill: forward over the prompt → last-token logits.
+        (KV-cache emission is pure data movement fused into the attention
+        projections; its footprint is measured by the decode cells.)"""
+        patches = batch.get("patches") if is_vlm else None
+        hidden, _ = transformer.forward(params, cfg, batch["tokens"],
+                                        patch_embeds=patches, remat=False)
+        return transformer.lm_logits(params, cfg, hidden[:, -1:])[:, 0]
+
+    def input_specs(shape: ShapeSpec) -> dict:
+        b, s = shape.global_batch, shape.seq_len
+        if shape.kind == "decode":
+            specs = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+        elif shape.kind == "prefill":
+            specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        else:
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            }
+        if is_vlm and shape.kind != "decode":
+            enc = cfg.encoder
+            fdim = enc.frontend_dim or cfg.d_model
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (b, enc.n_patches, fdim), jnp.bfloat16)
+        return specs
+
+    return ModelBundle(cfg, init, loss, init_cache, decode, input_specs,
+                       prefill)
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder (whisper)
+# ---------------------------------------------------------------------------
+def _build_encdec(cfg: ArchConfig) -> ModelBundle:
+    def init(rng):
+        return encdec.init_encdec(rng, cfg)
+
+    def loss(params, batch):
+        enc_out = encdec.encode(params, cfg, batch["frames"])
+        hidden = encdec.decode_train(params, cfg, batch["tokens"], enc_out)
+        nll = chunked_xent(hidden[:, :-1], params["embed"]["table"],
+                           batch["labels"][:, 1:])
+        return nll, {"nll": nll}
+
+    def init_cache(batch, max_seq, params=None, enc_out=None):
+        if params is None:
+            raise ValueError("enc-dec cache needs params (cross-attn K/V)")
+        return encdec.init_decode_cache(params, cfg, batch, max_seq, enc_out)
+
+    def decode(params, tokens, caches):
+        return encdec.decode_step(params, cfg, tokens, caches)
+
+    def prefill(params, batch):
+        """Audio prefill: encode frames + first decoder-step logits."""
+        enc_out = encdec.encode(params, cfg, batch["frames"])
+        hidden = encdec.decode_train(params, cfg, batch["tokens"], enc_out)
+        logits = jnp.einsum("bsd,vd->bsv", hidden[:, -1:],
+                            params["embed"]["table"])
+        return logits[:, 0]
+
+    def input_specs(shape: ShapeSpec) -> dict:
+        b, s = shape.global_batch, shape.seq_len
+        enc = cfg.encoder
+        if shape.kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+        specs = {
+            "frames": jax.ShapeDtypeStruct((b, enc.n_frames, cfg.d_model),
+                                           jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((b, min(s, cfg.max_position)),
+                                           jnp.int32),
+        }
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct(
+                (b, min(s, cfg.max_position)), jnp.int32)
+        return specs
+
+    return ModelBundle(cfg, init, loss, init_cache, decode, input_specs,
+                       prefill)
+
+
+# ---------------------------------------------------------------------------
+# cache stand-ins for dry-run decode lowering (no allocation)
+# ---------------------------------------------------------------------------
+def cache_specs(bundle: ModelBundle, batch: int, max_seq: int):
+    """ShapeDtypeStruct pytree matching init_cache without allocating."""
+    cfg = bundle.cfg
+    if cfg.enc_dec:
+        closure = functools.partial(_encdec_cache_eval, bundle, batch,
+                                    max_seq)
+    else:
+        closure = functools.partial(bundle.init_cache, batch, max_seq)
+    return jax.eval_shape(closure)
+
+
+def _encdec_cache_eval(bundle: ModelBundle, batch: int, max_seq: int):
+    cfg = bundle.cfg
+    params = transformer_params_shapes = None
+    # build cache specs directly without params: replicate structure
+    from repro.models import layers as L
+    caches = {"self": [], "cross_k": [], "cross_v": [],
+              "pos": jnp.zeros((), jnp.int32)}
+    f = cfg.encoder.n_frames
+    for _ in range(cfg.n_layers):
+        caches["self"].append(L.init_attn_cache(cfg, batch, max_seq))
+        caches["cross_k"].append(
+            jnp.zeros((batch, f, cfg.n_kv_heads, cfg.head_dim),
+                      jnp.dtype(cfg.param_dtype)))
+        caches["cross_v"].append(
+            jnp.zeros((batch, f, cfg.n_kv_heads, cfg.head_dim),
+                      jnp.dtype(cfg.param_dtype)))
+    del params, transformer_params_shapes
+    return caches

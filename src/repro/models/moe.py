@@ -1,0 +1,126 @@
+"""Mixture-of-Experts FFN (deepseek-moe fine-grained, olmoe).
+
+Token-choice top-k routing with capacity bounding, GShard-style:
+  1. router softmax → top-k experts per token,
+  2. position-in-expert via cumulative sum over tokens,
+  3. scatter tokens into per-expert slabs (E, C, d) — sharded over the
+     ``experts``/EP axis so XLA emits the dispatch all-to-all,
+  4. per-expert SwiGLU via stacked einsum,
+  5. weighted combine (gather back + sum over k).
+
+Shared experts (deepseek) run densely on every token. Aux load-balance loss
+(switch-style) is returned for the trainer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.dist.sharding import shard
+from repro.models.layers import dense_init, init_mlp, mlp
+
+
+def init_moe(key, cfg: ArchConfig) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(keys[0], d, m.num_experts, jnp.float32),
+        "experts": {
+            "w_gate": _stack_init(keys[1], m.num_experts, d, m.d_ff_expert,
+                                  dtype),
+            "w_up": _stack_init(keys[2], m.num_experts, d, m.d_ff_expert,
+                                dtype),
+            "w_down": _stack_init(keys[3], m.num_experts, m.d_ff_expert, d,
+                                  dtype),
+        },
+    }
+    if m.num_shared:
+        p["shared"] = init_mlp(keys[4], d, m.num_shared * m.d_ff_shared,
+                               dtype)
+    return {"moe": p}
+
+
+def _stack_init(key, e: int, din: int, dout: int, dtype):
+    scale = 1.0 / jnp.sqrt(din)
+    return (jax.random.normal(key, (e, din, dout), jnp.float32)
+            * scale).astype(dtype)
+
+
+def moe_ffn(params: dict, cfg: ArchConfig, x: jax.Array
+            ) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) → (y, aux_loss)."""
+    from repro.dist.sharding import current_mesh, has_rule
+    if has_rule("moe_a2a") and current_mesh() is not None:
+        # explicit expert-parallel dataflow (EXPERIMENTS §Perf cell 2
+        # endpoint): shard_map all-to-all dispatch instead of SPMD scatter
+        from repro.models.moe_a2a import moe_ffn_a2a
+        return moe_ffn_a2a(params, cfg, x)
+    m: MoEConfig = cfg.moe
+    p = params["moe"]
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, m.top_k)    # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    capacity = int(m.capacity_factor * t * m.top_k / m.num_experts)
+    capacity = max(8, min(capacity, t))
+
+    # position-in-expert via sort (perf iteration 2, EXPERIMENTS §Perf):
+    # the textbook cumsum-of-one-hot materializes a (T·k, E) int32 matrix
+    # that XLA all-gathers across data shards (2.1 GB/layer at olmoe's
+    # train_4k cell); rank-by-sort uses only 1-D length-T·k arrays.
+    eid = expert_idx.reshape(-1)                               # (T*k,)
+    order = jnp.argsort(eid)
+    eid_sorted = jnp.take(eid, order)
+    starts = jnp.searchsorted(eid_sorted, jnp.arange(m.num_experts))
+    ranks_sorted = jnp.arange(t * m.top_k) - jnp.take(starts, eid_sorted)
+    pos_in_expert = jnp.zeros_like(eid).at[order].set(ranks_sorted)
+    keep = pos_in_expert < capacity
+
+    # dispatch: scatter tokens into (E, C, d), bf16 payload end-to-end
+    src = jnp.repeat(xf, m.top_k, axis=0)                     # (T*k, d)
+    safe_pos = jnp.where(keep, pos_in_expert, capacity - 1)
+    from repro.dist.sharding import has_rule
+    if has_rule("moe_tokens"):
+        # replicated-token dispatch (perf iteration, EXPERIMENTS §Perf):
+        # one all-gather of the token payload lets every expert shard
+        # scatter locally — replacing the (E, C, d) slab all-reduce that
+        # SPMD emits for cross-shard scatter-adds
+        src = shard(src, "moe_tokens", "embed")
+    zeros = jnp.zeros((m.num_experts, capacity, d), x.dtype)
+    slab = zeros.at[eid, safe_pos].add(
+        jnp.where(keep[:, None], src, jnp.zeros((), x.dtype)))
+    slab = shard(slab, "experts", "capacity", "embed")
+
+    # per-expert SwiGLU
+    e = p["experts"]
+    h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", slab, e["w_gate"]))
+         * jnp.einsum("ecd,edf->ecf", slab, e["w_up"]))
+    h = shard(h, "experts", "capacity", "expert_mlp")
+    out_slab = jnp.einsum("ecf,efd->ecd", h, e["w_down"])
+    out_slab = shard(out_slab, "experts", "capacity", "embed")
+
+    # combine: gather each token's k expert outputs, weight, sum
+    gathered = out_slab[eid, safe_pos]                        # (T*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    w = gate_vals.reshape(-1)[:, None].astype(gathered.dtype)
+    y = jnp.sum((gathered * w).reshape(t, m.top_k, d), axis=1)
+
+    if m.num_shared:
+        y = y + mlp(params["moe"]["shared"], xf[None])[0]
+
+    # switch aux loss: fraction-of-tokens × mean-prob per expert
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jax.nn.one_hot(expert_idx[:, 0], m.num_experts, dtype=jnp.float32),
+        axis=0)
+    aux = m.num_experts * jnp.sum(me * ce) * m.router_aux_loss
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,109 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Real-Gated Linear Recurrent Unit:
+    r_t = σ(W_a x_t)                     (recurrence gate)
+    i_t = σ(W_x_gate x_t)                (input gate)
+    a_t = exp(−c · softplus(Λ) · r_t)    (per-channel decay ∈ (0,1))
+    h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Training uses an associative scan over the sequence (log-depth); decode is
+the O(1) per-step update. A depthwise causal conv (width 4) precedes the
+recurrence, as in the paper's recurrent block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, RGLRUConfig
+from repro.dist.sharding import shard
+from repro.models.layers import dense_init
+
+
+def _width(cfg: ArchConfig) -> int:
+    r: RGLRUConfig = cfg.rglru
+    return r.lru_width or cfg.d_model
+
+
+def init_rglru(key, cfg: ArchConfig) -> dict:
+    r = cfg.rglru
+    w = _width(cfg)
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 5)
+    return {"rglru": {
+        "w_x": dense_init(keys[0], cfg.d_model, w, dtype),
+        "w_gate_in": dense_init(keys[1], cfg.d_model, w, dtype),
+        "conv": (jax.random.normal(keys[2], (r.conv_width, w), jnp.float32)
+                 * 0.1).astype(dtype),
+        "a_param": jnp.full((w,), 0.7, jnp.float32),   # Λ
+        "in_gate_w": jnp.zeros((w,), jnp.float32),
+        "rec_gate_w": jnp.zeros((w,), jnp.float32),
+        "out": dense_init(keys[3], w, cfg.d_model, dtype),
+    }}
+
+
+def _gates(p, x_branch: jax.Array, c_const: float):
+    rec_gate = jax.nn.sigmoid(
+        x_branch.astype(jnp.float32) * p["rec_gate_w"][None, None]
+        + 0.0)
+    in_gate = jax.nn.sigmoid(
+        x_branch.astype(jnp.float32) * p["in_gate_w"][None, None])
+    log_a = -c_const * jax.nn.softplus(p["a_param"])[None, None] * rec_gate
+    a = jnp.exp(log_a)
+    return a, in_gate
+
+
+def rglru_block(params: dict, cfg: ArchConfig, u: jax.Array,
+                cache: dict | None = None):
+    """u: (B, S, d_model) → (y, new_cache)."""
+    p = params["rglru"]
+    r = cfg.rglru
+    b, s, _ = u.shape
+    gate = jax.nn.gelu(u @ p["w_gate_in"])
+    x = u @ p["w_x"]
+    x = shard(x, "batch", "seq", "mlp")
+
+    # depthwise causal conv
+    wsize = p["conv"].shape[0]
+    conv_state = cache["conv"] if cache is not None else \
+        jnp.zeros((b, wsize - 1, x.shape[-1]), x.dtype)
+    full = jnp.concatenate([conv_state, x], axis=1)
+    x = sum(full[:, i:i + s] * p["conv"][i][None, None]
+            for i in range(wsize))
+    new_conv = full[:, -(wsize - 1):]
+
+    a, in_gate = _gates(p, x, r.c_constant)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    v = beta * in_gate * x.astype(jnp.float32)                # (B,S,W)
+
+    if cache is not None:
+        h0 = cache["state"]                                   # (B, W)
+
+        def step(h, t):
+            h = a[:, t] * h + v[:, t]
+            return h, h
+
+        h_last, hs = jax.lax.scan(step, h0, jnp.arange(s))
+        h = jnp.moveaxis(hs, 0, 1)
+        new_cache = {"state": h_last, "conv": new_conv}
+    else:
+        # associative scan: (a2, v2) ∘ (a1, v1) = (a2·a1, a2·v1 + v2)
+        def combine(c1, c2):
+            a1, v1 = c1
+            a2, v2 = c2
+            return a1 * a2, a2 * v1 + v2
+
+        _, h = jax.lax.associative_scan(combine, (a, v), axis=1)
+        new_cache = None
+
+    y = (h.astype(u.dtype) * gate) @ p["out"]
+    return shard(y, "batch", "seq", "embed"), new_cache
+
+
+def init_rglru_cache(cfg: ArchConfig, batch: int) -> dict:
+    w = _width(cfg)
+    return {
+        "state": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.rglru.conv_width - 1, w),
+                          jnp.dtype(cfg.param_dtype)),
+    }

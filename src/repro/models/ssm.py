@@ -1,0 +1,189 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Chunked SSD algorithm: the sequence is split into chunks of length Q; the
+quadratic "attention-like" intra-chunk term and the linear inter-chunk state
+recurrence are combined:
+
+  intra:  Y_intra = (L ∘ (C Bᵀ)) · X           (L = causal decay matrix)
+  states: S_c     = Σ_t a(t..end) B_t X_tᵀ      (per-chunk final state)
+  carry:  H_c     = decay(c) H_{c−1} + S_c      (scan over chunks)
+  inter:  Y_inter = C · H_{c−1} (decayed)
+
+Decode is the O(1) recurrence h = a·h + B x; y = C·h + D x — the state is
+the whole cache (no KV growth ⇒ long_500k applicability, DESIGN §4).
+
+Scalar-per-head decay a_t = exp(−Δ_t·softplus(A_log)) (Mamba-2's SSD
+restriction), depthwise causal conv on the input projection.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.dist.sharding import shard
+from repro.models.layers import dense_init
+
+
+def _dims(cfg: ArchConfig):
+    s: SSMConfig = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return s, d_inner, n_heads
+
+
+def init_ssm(key, cfg: ArchConfig) -> dict:
+    s, d_inner, n_heads = _dims(cfg)
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 4)
+    # in_proj emits [x, z, B, C, dt]
+    proj_out = 2 * d_inner + 2 * n_heads * s.state_dim + n_heads
+    return {"ssm": {
+        "in_proj": dense_init(keys[0], cfg.d_model, proj_out, dtype),
+        "conv": (jax.random.normal(keys[1],
+                                   (s.conv_width,
+                                    d_inner + 2 * n_heads * s.state_dim),
+                                   jnp.float32) * 0.1).astype(dtype),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "out_proj": dense_init(keys[2], d_inner, cfg.d_model, dtype),
+    }}
+
+
+def _split_proj(cfg: ArchConfig, proj: jax.Array):
+    s, d_inner, n_heads = _dims(cfg)
+    x, z, bc, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner,
+               2 * d_inner + 2 * n_heads * s.state_dim], axis=-1)
+    return x, z, bc, dt
+
+
+def _causal_conv(seq: jax.Array, w: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv along axis 1. seq: (B, S, C); w: (W, C)."""
+    wsize = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((seq.shape[0], wsize - 1, seq.shape[2]), seq.dtype)
+    else:
+        pad = state
+    full = jnp.concatenate([pad, seq], axis=1)
+    out = sum(full[:, i:i + seq.shape[1]] * w[i][None, None]
+              for i in range(wsize))
+    new_state = full[:, -(wsize - 1):] if wsize > 1 else pad
+    return jax.nn.silu(out), new_state
+
+
+def ssm_block(params: dict, cfg: ArchConfig, u: jax.Array,
+              cache: dict | None = None):
+    """u: (B, S, d_model) → (y, new_cache)."""
+    p = params["ssm"]
+    s, d_inner, n_heads = _dims(cfg)
+    b, seqlen, _ = u.shape
+
+    proj = u @ p["in_proj"]
+    x, z, bc, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([x, bc], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, p["conv"], conv_state)
+    x, bc = conv_out[..., :d_inner], conv_out[..., d_inner:]
+    B, C = jnp.split(bc, 2, axis=-1)
+    B = B.reshape(b, seqlen, n_heads, s.state_dim)
+    C = C.reshape(b, seqlen, n_heads, s.state_dim)
+    xh = x.reshape(b, seqlen, n_heads, s.head_dim)
+    xh = shard(xh, "batch", "seq", "mlp", None)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None])          # (B,S,H)
+    a = jnp.exp(-dt * jnp.exp(p["A_log"])[None, None])        # decay ∈ (0,1)
+
+    if cache is not None:
+        # O(1) recurrence (decode); supports S≥1 via mini-scan
+        h0 = cache["state"]                                   # (B,H,P,N)
+
+        def step(h, t):
+            xt, Bt, Ct, at = (xh[:, t], B[:, t], C[:, t], a[:, t])
+            h = (h * at[..., None, None]
+                 + jnp.einsum("bhp,bhn->bhpn", xt.astype(jnp.float32),
+                              Bt.astype(jnp.float32)))
+            yt = jnp.einsum("bhpn,bhn->bhp", h, Ct.astype(jnp.float32))
+            return h, yt
+
+        h, ys = jax.lax.scan(step, h0, jnp.arange(seqlen))
+        y = jnp.moveaxis(ys, 0, 1)                            # (B,S,H,P)
+        new_cache = {"state": h, "conv": new_conv}
+    else:
+        y = _ssd_chunked(xh, a, B, C, s.chunk)
+        new_cache = None
+
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, seqlen, d_inner).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    return shard(out, "batch", "seq", "embed"), new_cache
+
+
+def _ssd_chunked(x: jax.Array, a: jax.Array, B: jax.Array, C: jax.Array,
+                 chunk: int) -> jax.Array:
+    """Chunked SSD scan. x: (B,S,H,P); a: (B,S,H); B/C: (B,S,H,N)."""
+    b, seq, h, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, seq)
+    orig_seq = seq
+    if seq % chunk:  # pad tail: x/B/C zeros (inert), decay 1 (state-neutral)
+        pad = chunk - seq % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        seq = seq + pad
+    c = seq // chunk
+
+    def r(t):  # (B, c, Q, ...) views
+        return t.reshape(b, c, chunk, *t.shape[2:])
+
+    xc, ac, Bc, Cc = r(x.astype(jnp.float32)), r(a), r(B.astype(jnp.float32)), \
+        r(C.astype(jnp.float32))
+    la = jnp.log(jnp.maximum(ac, 1e-20))                      # (B,c,Q,H)
+    cum = jnp.cumsum(la, axis=2)                              # inclusive
+
+    # intra-chunk: L[q,t] = exp(cum[q] − cum[t]) for q ≥ t  (decay t→q)
+    Lmat = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (B,c,Q,Q,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    Lmat = jnp.where(tri[None, None, :, :, None], jnp.exp(Lmat), 0.0)
+    scores = jnp.einsum("bcqhn,bcthn->bcqth", Cc, Bc)
+    y_intra = jnp.einsum("bcqth,bcqth,bcthp->bcqhp",
+                         scores, Lmat, xc)
+
+    # chunk states: S_c = Σ_t exp(cum[Q−1] − cum[t]) B_t x_tᵀ
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)                   # (B,c,Q,H)
+    states = jnp.einsum("bcthn,bcth,bcthp->bchpn", Bc, tail, xc)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                   # (B,c,H)
+
+    # inter-chunk recurrence over c
+    def carry_fn(hprev, inp):
+        st, dec = inp
+        hnew = hprev * dec[..., None, None] + st
+        return hnew, hprev
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    _, hprevs = jax.lax.scan(
+        carry_fn, h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    hprevs = jnp.moveaxis(hprevs, 0, 1)                       # (B,c,H,P,N)
+
+    inner = jnp.exp(cum)                                      # decay 0..t
+    y_inter = jnp.einsum("bcqhn,bcqh,bchpn->bcqhp", Cc, inner, hprevs)
+    out = (y_intra + y_inter).reshape(b, seq, h, p)
+    return out[:, :orig_seq]
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int) -> dict:
+    s, d_inner, n_heads = _dims(cfg)
+    return {
+        "state": jnp.zeros((batch, n_heads, s.head_dim, s.state_dim),
+                           jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1,
+                           d_inner + 2 * n_heads * s.state_dim),
+                          jnp.dtype(cfg.param_dtype)),
+    }

@@ -1,0 +1,289 @@
+"""Composable decoder-only LM covering dense / MoE / SSM / hybrid / VLM.
+
+Layer structure is a repeated *block pattern* (e.g. gemma3's 5 local + 1
+global, recurrentgemma's rglru,rglru,local). Layers are scanned in pattern
+groups: parameters for each pattern position are stacked over the repeat
+dimension and the whole group runs under one ``lax.scan`` (keeps HLO size
+O(pattern) instead of O(layers) — critical for 48-layer dry-run compiles).
+A remainder group covers ``n_layers % len(pattern)`` trailing layers.
+
+Decode caches mirror the same grouping, scanned alongside the params.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import shard
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+
+ATTN_KINDS = ("global", "local")
+
+
+# ---------------------------------------------------------------------------
+# per-layer blocks
+# ---------------------------------------------------------------------------
+def init_block(key, cfg: ArchConfig, kind: str, layer_idx: int) -> dict:
+    dtype = L.dtype_of(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: dict[str, Any] = {
+        "norm_in": L.init_rmsnorm(cfg.d_model, dtype),
+        "norm_mid": L.init_rmsnorm(cfg.d_model, dtype),
+    }
+    if kind in ATTN_KINDS:
+        p["attn"] = L.init_attention(k1, cfg)
+        p.update(_init_ffn(k2, cfg, layer_idx))
+    elif kind == "ssm":
+        p.update(ssm_mod.init_ssm(k1, cfg))
+        del p["norm_mid"]  # mamba blocks are single-branch
+    elif kind == "rglru":
+        p.update(rglru_mod.init_rglru(k1, cfg))
+        p.update(_init_ffn(k2, cfg, layer_idx))
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    return p
+
+
+def _init_ffn(key, cfg: ArchConfig, layer_idx: int) -> dict:
+    dtype = L.dtype_of(cfg)
+    if cfg.moe is not None and layer_idx >= cfg.moe.first_k_dense:
+        return moe_mod.init_moe(key, cfg)
+    d_ff = cfg.d_ff
+    if cfg.moe is not None:
+        d_ff = cfg.moe.d_ff_dense or cfg.d_ff
+    return {"mlp": L.init_mlp(key, cfg.d_model, d_ff, dtype)}
+
+
+def apply_block(params: dict, cfg: ArchConfig, kind: str, x: jax.Array,
+                positions: jax.Array, cache: Optional[dict]):
+    """→ (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rmsnorm(params["norm_in"], x, cfg.norm_eps)
+    if kind in ATTN_KINDS:
+        attn_out, new_attn_cache = L.attention(
+            params["attn"], cfg, h, positions, kind=kind,
+            cache=None if cache is None else cache)
+        x = x + attn_out
+        h2 = L.rmsnorm(params["norm_mid"], x, cfg.norm_eps)
+        if "moe" in params:
+            ffn_out, aux = moe_mod.moe_ffn(params, cfg, h2)
+        else:
+            ffn_out = L.mlp(params["mlp"], h2)
+        x = x + ffn_out
+        return x, new_attn_cache, aux
+    if kind == "ssm":
+        out, new_cache = ssm_mod.ssm_block(params, cfg, h, cache)
+        return x + out, new_cache, aux
+    if kind == "rglru":
+        out, new_cache = rglru_mod.rglru_block(params, cfg, h, cache)
+        x = x + out
+        h2 = L.rmsnorm(params["norm_mid"], x, cfg.norm_eps)
+        if "moe" in params:
+            ffn_out, aux = moe_mod.moe_ffn(params, cfg, h2)
+        else:
+            ffn_out = L.mlp(params["mlp"], h2)
+        return x + ffn_out, new_cache, aux
+    raise ValueError(kind)
+
+
+def init_block_cache(cfg: ArchConfig, kind: str, batch: int,
+                     max_seq: int) -> dict:
+    if kind in ATTN_KINDS:
+        return L.init_attn_cache(cfg, batch, max_seq, kind)
+    if kind == "ssm":
+        return ssm_mod.init_ssm_cache(cfg, batch)
+    if kind == "rglru":
+        return rglru_mod.init_rglru_cache(cfg, batch)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# pattern groups
+# ---------------------------------------------------------------------------
+def _groups(cfg: ArchConfig) -> list[tuple[int, tuple[str, ...], int]]:
+    """(repeats, pattern, start_layer_idx) groups covering n_layers.
+
+    Within a group, every layer at the same pattern position must share a
+    param structure — MoE archs with leading dense layers (deepseek's
+    first_k_dense) get those layers as a separate group.
+    """
+    groups: list[tuple[int, tuple[str, ...], int]] = []
+    pattern = tuple(cfg.block_pattern)
+    start = 0
+    n = cfg.n_layers
+    dense_k = cfg.moe.first_k_dense if cfg.moe is not None else 0
+    if dense_k:
+        full, part = divmod(dense_k, len(pattern))
+        if full:
+            groups.append((full, pattern, 0))
+        if part:
+            groups.append((1, _rot(pattern, full * len(pattern))[:part],
+                           full * len(pattern)))
+        start = dense_k
+    remaining = n - start
+    reps, rem = divmod(remaining, len(pattern))
+    if reps:
+        groups.append((reps, _rot(pattern, start), start))
+    if rem:
+        groups.append((1, _rot(pattern, start + reps * len(pattern))[:rem],
+                       start + reps * len(pattern)))
+    return groups
+
+
+def _rot(pattern: tuple[str, ...], abs_idx: int) -> tuple[str, ...]:
+    """Pattern as seen starting from absolute layer ``abs_idx``."""
+    k = abs_idx % len(pattern)
+    return pattern[k:] + pattern[:k]
+
+
+def _stack(trees: list) -> Any:
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_lm(rng, cfg: ArchConfig) -> dict:
+    dtype = L.dtype_of(cfg)
+    keys = jax.random.split(rng, cfg.n_layers + 3)
+    params: dict[str, Any] = {
+        "embed": {"table": L.embed_init(keys[-1], cfg.vocab, cfg.d_model,
+                                        dtype)},
+        "final_norm": L.init_rmsnorm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"kernel": L.dense_init(
+            keys[-2], cfg.d_model, cfg.vocab, dtype)}
+    if cfg.family == "vlm":
+        enc = cfg.encoder
+        fdim = enc.frontend_dim or cfg.d_model
+        params["frontend"] = {"proj": L.dense_init(keys[-3], fdim,
+                                                   cfg.d_model, dtype)}
+    groups = []
+    for reps, pattern, start in _groups(cfg):
+        stacked = []
+        for pi, kind in enumerate(pattern):
+            per_rep = []
+            for r in range(reps):
+                idx = start + r * len(pattern) + pi
+                per_rep.append(init_block(keys[idx], cfg, kind, idx))
+            stacked.append(_stack(per_rep))
+        groups.append(stacked)
+    params["groups"] = groups
+    return params
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int) -> list:
+    caches = []
+    for reps, pattern, _ in _groups(cfg):
+        stacked = []
+        for kind in pattern:
+            per_rep = [init_block_cache(cfg, kind, batch, max_seq)
+                       for _ in range(reps)]
+            stacked.append(_stack(per_rep))
+        caches.append(stacked)
+    return caches
+
+
+def _run_groups(params: dict, cfg: ArchConfig, x: jax.Array,
+                positions: jax.Array, caches: Optional[list],
+                remat: bool = False, unroll: bool = False):
+    total_aux = jnp.zeros((), jnp.float32)
+    new_caches: Optional[list] = [] if caches is not None else None
+    for gi, (reps, pattern, _) in enumerate(_groups(cfg)):
+        gparams = params["groups"][gi]
+        gcaches = caches[gi] if caches is not None else None
+
+        if unroll and gcaches is not None:
+            # decode-optimized path: Python-unrolled layers — caches update
+            # in place (donated args alias outputs) instead of riding a
+            # lax.scan carry that XLA double-buffers (EXPERIMENTS §Perf)
+            new_layer_caches = [[] for _ in pattern]
+            for r in range(reps):
+                for pi, kind in enumerate(pattern):
+                    lp = jax.tree_util.tree_map(lambda p: p[r], gparams[pi])
+                    c = jax.tree_util.tree_map(lambda v: v[r], gcaches[pi])
+                    x, nc, a = apply_block(lp, cfg, kind, x, positions, c)
+                    total_aux = total_aux + a
+                    new_layer_caches[pi].append(nc)
+            new_caches.append([
+                jax.tree_util.tree_map(lambda *vs: jnp.stack(vs), *ncs)
+                for ncs in new_layer_caches])
+            continue
+
+        def body(carry, xs):
+            h, aux = carry
+            layer_params = xs[0]
+            layer_caches = xs[1] if gcaches is not None else None
+            outs = []
+            for pi, kind in enumerate(pattern):
+                c = layer_caches[pi] if layer_caches is not None else None
+                h, nc, a = apply_block(layer_params[pi], cfg, kind, h,
+                                       positions, c)
+                aux = aux + a
+                outs.append(nc)
+            return (h, aux), (outs if gcaches is not None else 0)
+
+        body_fn = jax.checkpoint(body) if remat else body
+        xs = (gparams, gcaches) if gcaches is not None else (gparams,)
+        (x, total_aux), ys = jax.lax.scan(body_fn, (x, total_aux), xs)
+        if gcaches is not None:
+            new_caches.append(ys)
+    return x, new_caches, total_aux
+
+
+# ---------------------------------------------------------------------------
+# public forward passes
+# ---------------------------------------------------------------------------
+def forward(params: dict, cfg: ArchConfig, tokens: jax.Array,
+            patch_embeds: Optional[jax.Array] = None, remat: bool = True):
+    """Training/prefill forward → (hidden (B,S,d), aux_loss).
+
+    VLM: ``patch_embeds`` (B, P, frontend_dim) are projected and prepended;
+    the returned hidden covers the full (P+S) sequence.
+    """
+    x = jnp.take(params["embed"]["table"], tokens, axis=0)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if patch_embeds is not None:
+        px = patch_embeds.astype(x.dtype) @ params["frontend"]["proj"]
+        x = jnp.concatenate([px, x], axis=1)
+    x = shard(x, "batch", "seq", "embed")
+    positions = jnp.arange(x.shape[1])[None, :]
+    x, _, aux = _run_groups(params, cfg, x, positions, None, remat=remat)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux
+
+
+def decode_step(params: dict, cfg: ArchConfig, tokens: jax.Array,
+                caches: list, unroll: bool = False):
+    """One decode step. tokens: (B, 1) → (logits (B, vocab), new caches)."""
+    x = jnp.take(params["embed"]["table"], tokens, axis=0)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    x = shard(x, "batch", "seq", "embed")
+    pos0 = _cache_pos(cfg, caches)
+    positions = (pos0 + jnp.arange(tokens.shape[1]))[None, :]
+    x, new_caches, _ = _run_groups(params, cfg, x, positions, caches,
+                                   unroll=unroll)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_logits(params, cfg, x[:, -1:])[:, 0]
+    return logits, new_caches
+
+
+def _cache_pos(cfg: ArchConfig, caches: list) -> jax.Array:
+    """Current absolute position — stored in every attn cache; ssm/rglru
+    archs keep a dedicated counter in the first cache dict."""
+    for group in caches:
+        for stacked in group:
+            if isinstance(stacked, dict) and "pos" in stacked:
+                return stacked["pos"][0]  # all layers advance in lockstep
+    return jnp.zeros((), jnp.int32)
+
+
+def lm_logits(params: dict, cfg: ArchConfig, hidden: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        table = params["embed"]["table"]
+        return jnp.einsum("bsd,vd->bsv", hidden, table)
+    return hidden @ params["lm_head"]["kernel"]

@@ -1,0 +1,7 @@
+"""Runtime: elasticity, failure handling, straggler mitigation."""
+from repro.runtime.elastic import (ElasticController, HeartbeatRegistry,
+                                   MeshPlan, plan_mesh)
+from repro.runtime.straggler import HostMonitor, StepTimer, rebalance_edges
+
+__all__ = ["ElasticController", "HeartbeatRegistry", "HostMonitor",
+           "MeshPlan", "StepTimer", "plan_mesh", "rebalance_edges"]

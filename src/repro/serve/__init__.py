@@ -1,0 +1,4 @@
+"""Serving: batched continuous-decode engine."""
+from repro.serve.engine import Request, ServeEngine
+
+__all__ = ["Request", "ServeEngine"]

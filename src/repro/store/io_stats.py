@@ -1,0 +1,98 @@
+"""I/O accounting: every byte that crosses the storage boundary is recorded.
+
+The paper's Fig. 16 reports *total* vs *useful* disk traffic; the ratio is
+read amplification. We track both so the same table can be produced from any
+store implementation (bucketed or per-vector).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+PAGE_SIZE = 4096  # bytes — minimum granularity of a disk read (paper §1)
+
+
+@dataclasses.dataclass
+class IOStats:
+    """Mutable I/O counters shared by a store and its readers."""
+
+    read_ops: int = 0
+    write_ops: int = 0
+    bytes_read_total: int = 0      # page-granular traffic (what the disk does)
+    bytes_read_useful: int = 0     # bytes the caller actually consumes
+    bytes_written_total: int = 0
+    bytes_written_useful: int = 0
+    read_seconds: float = 0.0
+    write_seconds: float = 0.0
+
+    def record_read(self, useful: int, *, page_aligned: bool = True) -> None:
+        total = _page_round(useful) if page_aligned else useful
+        self.read_ops += 1
+        self.bytes_read_total += total
+        self.bytes_read_useful += useful
+
+    def record_write(self, useful: int, *, page_aligned: bool = True) -> None:
+        total = _page_round(useful) if page_aligned else useful
+        self.write_ops += 1
+        self.bytes_written_total += total
+        self.bytes_written_useful += useful
+
+    @property
+    def read_amplification(self) -> float:
+        if self.bytes_read_useful == 0:
+            return 1.0
+        return self.bytes_read_total / self.bytes_read_useful
+
+    @property
+    def write_amplification(self) -> float:
+        if self.bytes_written_useful == 0:
+            return 1.0
+        return self.bytes_written_total / self.bytes_written_useful
+
+    def merge(self, other: "IOStats") -> "IOStats":
+        out = IOStats()
+        for f in dataclasses.fields(IOStats):
+            setattr(out, f.name, getattr(self, f.name) + getattr(other, f.name))
+        return out
+
+    def snapshot(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["read_amplification"] = self.read_amplification
+        d["write_amplification"] = self.write_amplification
+        return d
+
+    def reset(self) -> None:
+        for f in dataclasses.fields(IOStats):
+            setattr(self, f.name, type(getattr(self, f.name))())
+
+
+class _Timer:
+    """Context manager accumulating wall time into an IOStats field."""
+
+    def __init__(self, stats: IOStats, field: str):
+        self._stats = stats
+        self._field = field
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        dt = time.perf_counter() - self._t0
+        setattr(self._stats, self._field, getattr(self._stats, self._field) + dt)
+        return False
+
+
+def read_timer(stats: IOStats) -> _Timer:
+    return _Timer(stats, "read_seconds")
+
+
+def write_timer(stats: IOStats) -> _Timer:
+    return _Timer(stats, "write_seconds")
+
+
+def _page_round(nbytes: int) -> int:
+    if nbytes <= 0:
+        return 0
+    return ((nbytes + PAGE_SIZE - 1) // PAGE_SIZE) * PAGE_SIZE

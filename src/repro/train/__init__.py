@@ -1,0 +1,7 @@
+"""Training substrate: optimizer, loop, gradient compression."""
+from repro.train.grad_compress import make_int8_compressor
+from repro.train.optimizer import AdamW, AdamWConfig, lr_schedule
+from repro.train.train_loop import TrainConfig, train
+
+__all__ = ["AdamW", "AdamWConfig", "TrainConfig", "lr_schedule",
+           "make_int8_compressor", "train"]

@@ -1,0 +1,100 @@
+"""AdamW with f32 master stats, global-norm clipping, and hooks for
+gradient compression — self-contained (no optax dependency).
+
+State layout mirrors the param tree (mu, nu per leaf) so parameter
+shardings propagate 1:1 to optimizer state; ZeRO-1/3 falls out of handing
+``param_shardings(..., fsdp=True)`` to the state's out_shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup → cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.learning_rate * warm * (cfg.min_lr_ratio
+                                       + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+@dataclasses.dataclass
+class AdamW:
+    cfg: AdamWConfig
+    # optional gradient transform (e.g. int8 compression w/ error feedback)
+    grad_transform: Optional[Callable[[Any, Any], tuple[Any, Any]]] = None
+
+    def init(self, params):
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        state = {"mu": zeros,
+                 "nu": jax.tree_util.tree_map(jnp.copy, zeros),
+                 "step": jnp.zeros((), jnp.int32)}
+        if self.grad_transform is not None:
+            state["error"] = jax.tree_util.tree_map(jnp.copy, zeros)
+        return state
+
+    def update(self, grads, state, params):
+        c = self.cfg
+        step = state["step"] + 1
+        if self.grad_transform is not None:
+            grads, new_error = self.grad_transform(grads, state["error"])
+        else:
+            new_error = None
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, c.clip_norm / (gnorm + 1e-9))
+        lr = lr_schedule(c, step)
+        b1t = 1 - c.b1 ** step.astype(jnp.float32)
+        b2t = 1 - c.b2 ** step.astype(jnp.float32)
+
+        def upd(g, mu, nu, p):
+            g = g.astype(jnp.float32) * scale
+            mu = c.b1 * mu + (1 - c.b1) * g
+            nu = c.b2 * nu + (1 - c.b2) * g * g
+            mhat = mu / b1t
+            nhat = nu / b2t
+            delta = mhat / (jnp.sqrt(nhat) + c.eps)
+            delta = delta + c.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), \
+                mu, nu
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_mu = treedef.flatten_up_to(state["mu"])
+        flat_nu = treedef.flatten_up_to(state["nu"])
+        out = [upd(g, m, n, p)
+               for g, m, n, p in zip(flat_g, flat_mu, flat_nu, flat_p)]
+        new_params = treedef.unflatten([o[0] for o in out])
+        new_state = {"mu": treedef.unflatten([o[1] for o in out]),
+                     "nu": treedef.unflatten([o[2] for o in out]),
+                     "step": step}
+        if new_error is not None:
+            new_state["error"] = new_error
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,103 @@
+"""Training loop with checkpoint/restart, straggler telemetry, and elastic
+re-meshing hooks (the end-to-end driver used by examples/train_lm.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager, restore_latest
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.dist import sharding as shd
+from repro.models import build_model
+from repro.runtime.straggler import StepTimer
+from repro.train.optimizer import AdamW, AdamWConfig
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    seed: int = 0
+    global_batch: int = 8
+    seq_len: int = 128
+    optimizer: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+
+
+def train(cfg: ArchConfig, tcfg: TrainConfig,
+          mesh: Optional[jax.sharding.Mesh] = None,
+          grad_transform=None,
+          on_step: Optional[Callable[[int, dict], None]] = None) -> dict:
+    """Train a (usually reduced) model end-to-end. Returns final metrics."""
+    from repro.launch.steps import make_train_step  # lazy: avoids cycle
+    bundle = build_model(cfg)
+    opt = AdamW(tcfg.optimizer, grad_transform=grad_transform)
+    step_fn = make_train_step(bundle, opt)
+
+    pipeline = TokenPipeline(PipelineConfig(
+        vocab=cfg.vocab, seq_len=tcfg.seq_len,
+        global_batch=tcfg.global_batch, seed=tcfg.seed))
+
+    rng = jax.random.PRNGKey(tcfg.seed)
+    params = bundle.init(rng)
+    opt_state = opt.init(params)
+    start_step = 0
+
+    manager = None
+    if tcfg.checkpoint_dir:
+        manager = CheckpointManager(tcfg.checkpoint_dir)
+        restored = restore_latest(tcfg.checkpoint_dir,
+                                  {"params": params, "opt": opt_state})
+        if restored is not None:
+            start_step, tree, extra = restored
+            params, opt_state = tree["params"], tree["opt"]
+            if "pipeline" in extra:
+                pipeline.restore(extra["pipeline"])
+
+    if mesh is not None:
+        shd.set_mesh(mesh)
+        p_shards = shd.param_shardings(params, mesh)
+        params = jax.device_put(params, p_shards)
+        jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+    else:
+        jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    timer = StepTimer()
+    losses = []
+    metrics = {}
+    try:
+        for step in range(start_step, tcfg.steps):
+            batch = pipeline.batch_at(step)
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            t0 = time.perf_counter()
+            params, opt_state, metrics = jitted(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            timer.record(time.perf_counter() - t0)
+            losses.append(loss)
+            if on_step is not None:
+                on_step(step, {k: float(v) for k, v in metrics.items()})
+            if step % tcfg.log_every == 0:
+                print(f"step {step:5d} loss {loss:.4f} "
+                      f"({timer.mean_ms:.0f} ms/step)")
+            if manager and step and step % tcfg.checkpoint_every == 0:
+                pipeline.step = step + 1
+                manager.save(step + 1,
+                             {"params": params, "opt": opt_state},
+                             extra={"pipeline": pipeline.state()})
+    finally:
+        if manager:
+            manager.close()
+        shd.set_mesh(None)
+    return {
+        "final_loss": losses[-1] if losses else float("nan"),
+        "loss_history": losses,
+        "mean_step_ms": timer.mean_ms,
+        "straggler_report": timer.report(),
+    }

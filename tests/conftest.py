@@ -1,0 +1,35 @@
+import os
+import sys
+
+# tests see ONE device (the dry-run sets 512 in its own subprocess only)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def clustered_20k():
+    from repro.data import clustered_vectors, epsilon_for_avg_neighbors
+    x = clustered_vectors(20000, 64, seed=1)
+    eps = epsilon_for_avg_neighbors(x, 20)
+    return x, eps
+
+
+@pytest.fixture(scope="session")
+def small_dataset():
+    from repro.data import clustered_vectors, epsilon_for_avg_neighbors
+    x = clustered_vectors(4000, 32, seed=5)
+    eps = epsilon_for_avg_neighbors(x, 10)
+    return x, eps
+
+
+@pytest.fixture()
+def tmp_store(tmp_path):
+    from repro.store.vector_store import FlatVectorStore
+
+    def make(x):
+        return FlatVectorStore.from_array(
+            str(tmp_path / f"data_{x.shape[0]}.bin"), np.asarray(x))
+
+    return make

@@ -1,0 +1,168 @@
+"""Unit tests for the DiskJoin core: pruning math, ordering, cache policies,
+bucketization invariants, store I/O accounting."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (BucketGraph, cap_constant, edge_schedule, gorder,
+                        miss_bound_terms, prune_candidates, simulate_belady,
+                        simulate_policy, window_size)
+from repro.core.types import JoinConfig, canonicalize_pairs, recall
+from repro.store.io_stats import IOStats, PAGE_SIZE
+
+
+# ---------------------------------------------------------------------------
+# pruning (Eq. 3 / Alg. 3)
+# ---------------------------------------------------------------------------
+def test_cap_constant_matches_gamma_identity():
+    # μ(d) = Γ((d−1)/2) / (√π Γ(d/2)); check d=3 analytically:
+    # Γ(1)/（√π Γ(1.5)) = 1/(√π·(√π/2)) = 2/π
+    assert abs(cap_constant(3) - 2 / math.pi) < 1e-12
+
+
+def test_cap_constant_decreases_with_dimension():
+    vals = [cap_constant(d) for d in (4, 16, 64, 256, 1024)]
+    assert all(a > b for a, b in zip(vals, vals[1:]))
+
+
+def test_miss_bound_zero_when_no_intersection():
+    # candidate center at distance 2r ⇒ bisector beyond the ball ⇒ x=1
+    terms = miss_bound_terms(np.asarray([4.0]), radius=2.0, dim=32)
+    assert terms[0] == 0.0
+
+
+def test_prune_keeps_all_at_recall_1():
+    dists = np.asarray([0.5, 1.0, 1.5, 2.0])
+    keep = prune_candidates(dists, radius=2.0, dim=32, recall_target=1.0)
+    assert keep.all()
+
+
+def test_prune_drops_far_first():
+    dists = np.asarray([0.5, 3.9, 2.0, 3.5])
+    keep = prune_candidates(dists, radius=2.0, dim=64, recall_target=0.9)
+    # whatever is pruned must be a suffix of the distance ordering
+    pruned = set(np.flatnonzero(~keep))
+    if pruned:
+        order = np.argsort(-dists)
+        k = len(pruned)
+        assert pruned == set(order[:k])
+
+
+def test_cross_join_bound_monotone_in_candidate_radius():
+    """Bigger candidate radius ⇒ shallower cap cut ⇒ larger miss bound."""
+    d = np.asarray([1.0, 2.0])
+    r = 1.5
+    t_small = miss_bound_terms(d, r, 64, cand_radii=np.asarray([0.2, 0.2]))
+    t_large = miss_bound_terms(d, r, 64, cand_radii=np.asarray([0.9, 0.9]))
+    assert (t_large >= t_small - 1e-12).all()
+
+
+# ---------------------------------------------------------------------------
+# ordering (Alg. 2) + schedules
+# ---------------------------------------------------------------------------
+def _ring_graph(n):
+    edges = np.asarray([(i, (i + 1) % n) for i in range(n)])
+    e = np.stack([edges.min(1), edges.max(1)], 1)
+    return BucketGraph(num_nodes=n, edges=np.unique(e, axis=0))
+
+
+def test_gorder_is_permutation():
+    g = _ring_graph(12)
+    order = gorder(g, window=3)
+    assert sorted(order.tolist()) == list(range(12))
+
+
+def test_edge_schedule_covers_all_edges_once():
+    g = _ring_graph(8)
+    tasks, access, pins = edge_schedule(g, np.arange(8))
+    edges = {(min(u, v), max(u, v)) for t, *rest in [() for _ in []]} or set()
+    edge_tasks = [t for t in tasks if t[0] == "edge"]
+    got = {(min(u, v), max(u, v)) for _, u, v in edge_tasks}
+    want = {tuple(e) for e in g.edges.tolist()}
+    assert got == want
+    touches = [t[1] for t in tasks if t[0] == "touch"]
+    assert sorted(touches) == list(range(8))
+    assert len(access) == len(pins)
+
+
+def test_window_size_formula():
+    g = _ring_graph(10)  # avg degree 2
+    assert window_size(8, g) == 4
+
+
+# ---------------------------------------------------------------------------
+# cache policies (Alg. 1 + Fig. 17)
+# ---------------------------------------------------------------------------
+def test_belady_beats_or_equals_lru_fifo_lfu():
+    rng = np.random.default_rng(3)
+    seq = rng.integers(0, 30, size=600)
+    for cap in (3, 6, 10):
+        b = simulate_belady(seq, 30, cap)
+        for policy in ("lru", "fifo", "lfu"):
+            other = simulate_policy(seq, 30, cap, policy)
+            assert b.misses <= other.misses, (cap, policy)
+
+
+def test_belady_classic_example():
+    # paper Fig. 4 flavour: Belady keeps the soon-reused page
+    seq = np.asarray([1, 2, 3, 4, 1, 2, 5, 1, 2, 3, 4, 5])
+    b = simulate_belady(seq, 6, 4)
+    lru = simulate_policy(seq, 6, 4, "lru")
+    assert b.misses <= lru.misses
+
+
+def test_belady_respects_pins():
+    seq = np.asarray([0, 1, 2, 0, 3])
+    pins = np.asarray([-1, 0, -1, -1, -1])  # while loading 1, pin 0
+    s = simulate_belady(seq, 5, 2, pins)
+    # replay: at access of 1, victim must not be 0
+    for (b, hit, victim), pin in zip(s.actions, pins):
+        if victim is not None:
+            assert victim != pin
+
+
+def test_schedule_replay_consistency():
+    """hits+misses == accesses; loads == misses."""
+    rng = np.random.default_rng(0)
+    seq = rng.integers(0, 20, size=200)
+    for policy in ("belady", "lru", "fifo", "lfu"):
+        s = simulate_policy(seq, 20, 5, policy)
+        assert s.hits + s.misses == len(seq)
+        assert s.loads == s.misses
+        assert len(s.actions) == len(seq)
+
+
+# ---------------------------------------------------------------------------
+# store + io accounting
+# ---------------------------------------------------------------------------
+def test_per_vector_reads_amplify(tmp_path, tmp_store):
+    x = np.zeros((100, 16), np.float32)  # 64B rows << 4KB page
+    store = tmp_store(x)
+    store.stats.reset()
+    store.read_vector(3)
+    assert store.stats.bytes_read_total == PAGE_SIZE
+    assert store.stats.read_amplification == PAGE_SIZE / 64
+
+
+def test_block_reads_do_not_amplify(tmp_store):
+    x = np.zeros((4096, 64), np.float32)
+    store = tmp_store(x)
+    store.stats.reset()
+    store.read_block(0, 4096)
+    assert store.stats.read_amplification < 1.01
+
+
+def test_types_recall_and_canonicalize():
+    pairs = np.asarray([[3, 1], [1, 3], [2, 2], [4, 5]])
+    canon = canonicalize_pairs(pairs)
+    assert canon.tolist() == [[1, 3], [4, 5]]
+    assert recall(canon, np.asarray([[1, 3], [4, 5], [6, 7]])) == 2 / 3
+    assert recall(np.zeros((0, 2), np.int64), np.zeros((0, 2), np.int64)) \
+        == 1.0
+
+
+def test_join_config_bucket_resolution():
+    cfg = JoinConfig(epsilon=1.0)
+    assert cfg.resolve_num_buckets(1_000_000) == 1000  # paper's 1‰
+    assert cfg.resolve_num_buckets(100) >= 2

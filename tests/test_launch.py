@@ -1,0 +1,142 @@
+"""Launch-layer tests: HLO census correctness, roofline math, dry-run
+record integrity (when results/ exists), mesh planning."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS,
+                                   model_flops_per_device, roofline_terms)
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun.json")
+
+
+class TestHloCensus:
+    def test_scan_trip_count_multiplied(self):
+        def f(x):
+            def body(c, _):
+                return c @ c, None
+            y, _ = jax.lax.scan(body, x, None, length=10)
+            return y
+        x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+        c = jax.jit(f).lower(x).compile()
+        r = analyze_hlo(c.as_text())
+        assert r["flops"] == 10 * 2 * 128 ** 3
+        # XLA's own analysis undercounts — that's why the census exists
+        assert c.cost_analysis()["flops"] < r["flops"]
+
+    def test_nested_scan(self):
+        def g(x):
+            def outer(c, _):
+                def inner(ci, _):
+                    return ci @ ci, None
+                y, _ = jax.lax.scan(inner, c, None, length=5)
+                return y, None
+            y, _ = jax.lax.scan(outer, x, None, length=3)
+            return y
+        x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        c = jax.jit(g).lower(x).compile()
+        assert analyze_hlo(c.as_text())["flops"] == 15 * 2 * 64 ** 3
+
+    def test_flash_region_attribution(self):
+        def f(q, k):
+            with jax.named_scope("flash_attn_region"):
+                return q @ k.T
+        q = jax.ShapeDtypeStruct((128, 64), jnp.float32)
+        c = jax.jit(f).lower(q, q).compile()
+        r = analyze_hlo(c.as_text())
+        assert r["flash_region_flops"] == 2 * 128 * 128 * 64
+        assert r["flash_region_flops"] == r["flops"]
+
+    def test_bytes_bracket_ordering(self):
+        def f(a, b):
+            return jnp.tanh(a @ b) + 1.0
+        a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+        c = jax.jit(f).lower(a, a).compile()
+        r = analyze_hlo(c.as_text())
+        assert 0 < r["bytes_lo"] <= r["bytes_hi"]
+
+
+class TestRooflineMath:
+    def _rec(self, **kw):
+        base = dict(
+            status="ok", arch="qwen3-0.6b", shape="train_4k", mesh="16x16",
+            tag="baseline", step="train_step",
+            active_params=10 ** 9, tokens=10 ** 6, chips=256,
+            hlo_cost={"flops": 1e13, "bytes_lo": 1e11, "bytes_hi": 2e11,
+                      "collective_traffic_bytes": 1e10},
+            memory={"argument_size_in_bytes": 0, "output_size_in_bytes": 0,
+                    "alias_size_in_bytes": 0, "bytes_per_device": 1e9},
+        )
+        base.update(kw)
+        return base
+
+    def test_terms_and_dominance(self):
+        t = roofline_terms(self._rec())
+        assert abs(t["compute_s"] - 1e13 / PEAK_FLOPS) < 1e-12
+        assert abs(t["memory_s"] - 1e11 / HBM_BW) < 1e-12
+        assert abs(t["collective_s"] - 1e10 / ICI_BW) < 1e-12
+        assert t["dominant"] == "collective"
+        assert 0 < t["roofline_fraction"] <= 1.5
+
+    def test_model_flops_kinds(self):
+        train = model_flops_per_device(self._rec())
+        pre = model_flops_per_device(self._rec(step="prefill_step"))
+        assert train == 3 * pre  # 6·N·D vs 2·N·D
+
+    def test_skipped_and_partial_records_pass_through(self):
+        assert roofline_terms({"status": "skipped"}) is None
+        assert roofline_terms({"status": "ok"}) is None  # no hlo_cost
+
+
+@pytest.mark.skipif(not os.path.exists(RESULTS),
+                    reason="dry-run results not generated")
+class TestDryrunRecords:
+    def test_full_40_cell_coverage_both_meshes(self):
+        rows = json.load(open(RESULTS))
+        base = [r for r in rows if r.get("tag") == "baseline"]
+        cells = {(r["arch"], r["shape"], r["mesh"]) for r in base}
+        archs = ["gemma3-4b", "mistral-nemo-12b", "qwen3-0.6b",
+                 "chatglm3-6b", "deepseek-moe-16b", "olmoe-1b-7b",
+                 "mamba2-1.3b", "recurrentgemma-2b", "internvl2-26b",
+                 "whisper-small"]
+        shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+        for a in archs:
+            for s in shapes:
+                for m in ("16x16", "2x16x16"):
+                    assert (a, s, m) in cells, f"missing cell {(a, s, m)}"
+
+    def test_no_error_cells(self):
+        rows = json.load(open(RESULTS))
+        errs = [(r["arch"], r["shape"], r["mesh"], r.get("tag"))
+                for r in rows if r["status"] == "error"]
+        assert not errs, errs
+
+    def test_skips_match_design_matrix(self):
+        rows = json.load(open(RESULTS))
+        skipped = {(r["arch"], r["shape"]) for r in rows
+                   if r["status"] == "skipped" and r.get("tag") == "baseline"}
+        expected = {(a, "long_500k") for a in
+                    ("mistral-nemo-12b", "qwen3-0.6b", "chatglm3-6b",
+                     "deepseek-moe-16b", "olmoe-1b-7b", "internvl2-26b",
+                     "whisper-small")}
+        assert skipped == expected
+
+    def test_sub_quadratic_archs_run_long_context(self):
+        rows = json.load(open(RESULTS))
+        ok = {(r["arch"], r["shape"]) for r in rows if r["status"] == "ok"}
+        for a in ("mamba2-1.3b", "recurrentgemma-2b", "gemma3-4b"):
+            assert (a, "long_500k") in ok
+
+
+def test_plan_mesh_production_shapes():
+    from repro.runtime import plan_mesh
+    p = plan_mesh(512, global_batch=256)
+    assert (p.pod, p.data, p.model) == (2, 16, 16)
+    p = plan_mesh(256, global_batch=256)
+    assert (p.data, p.model) == (16, 16) and p.pod == 1

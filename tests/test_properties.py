@@ -1,0 +1,160 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BucketGraph, cap_constant, edge_schedule, gorder,
+                        miss_bound_terms, prune_candidates, simulate_belady,
+                        simulate_policy)
+from repro.core.types import canonicalize_pairs, recall
+from repro.runtime.elastic import plan_mesh
+from repro.store.io_stats import IOStats
+
+
+# ---------------------------------------------------------------------------
+# cache policy invariants
+# ---------------------------------------------------------------------------
+@settings(max_examples=50, deadline=None)
+@given(
+    seq=st.lists(st.integers(0, 14), min_size=1, max_size=300),
+    cap=st.integers(2, 12),
+)
+def test_belady_optimality_property(seq, cap):
+    """Belady never does more misses than any online policy (MIN theorem)."""
+    s = np.asarray(seq)
+    b = simulate_belady(s, 15, cap)
+    for policy in ("lru", "fifo", "lfu"):
+        assert b.misses <= simulate_policy(s, 15, cap, policy).misses
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    seq=st.lists(st.integers(0, 9), min_size=1, max_size=200),
+    cap=st.integers(2, 8),
+)
+def test_cache_miss_lower_bound(seq, cap):
+    """Misses ≥ number of distinct buckets (each loaded at least once)."""
+    s = np.asarray(seq)
+    distinct = len(set(seq))
+    for policy in ("belady", "lru", "fifo", "lfu"):
+        r = simulate_policy(s, 10, cap, policy)
+        assert r.misses >= distinct
+        assert r.hits + r.misses == len(seq)
+
+
+# ---------------------------------------------------------------------------
+# ordering invariants
+# ---------------------------------------------------------------------------
+def _random_graph(draw_edges, n):
+    if not draw_edges:
+        return BucketGraph(num_nodes=n, edges=np.zeros((0, 2), np.int64))
+    e = np.asarray([(min(a, b), max(a, b)) for a, b in draw_edges
+                    if a != b], np.int64)
+    if e.size == 0:
+        return BucketGraph(num_nodes=n, edges=np.zeros((0, 2), np.int64))
+    return BucketGraph(num_nodes=n, edges=np.unique(e, axis=0))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(2, 20),
+    edges=st.lists(st.tuples(st.integers(0, 19), st.integers(0, 19)),
+                   max_size=60),
+    window=st.integers(1, 8),
+)
+def test_gorder_always_permutation(n, edges, window):
+    g = _random_graph([(a % n, b % n) for a, b in edges], n)
+    order = gorder(g, window)
+    assert sorted(order.tolist()) == list(range(n))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(2, 16),
+    edges=st.lists(st.tuples(st.integers(0, 15), st.integers(0, 15)),
+                   max_size=40),
+)
+def test_edge_schedule_complete_cover(n, edges):
+    """Every edge processed exactly once; every node touched exactly once;
+    pins always name the other endpoint of the in-flight edge."""
+    g = _random_graph([(a % n, b % n) for a, b in edges], n)
+    tasks, access, pins = edge_schedule(g, np.arange(n))
+    etasks = [(min(u, v), max(u, v)) for k, u, v in
+              [t for t in tasks if t[0] == "edge"]]
+    assert sorted(etasks) == sorted(map(tuple, g.edges.tolist()))
+    assert sorted(t[1] for t in tasks if t[0] == "touch") == list(range(n))
+    i = 0
+    for t in tasks:
+        if t[0] == "touch":
+            assert pins[i] == -1
+            i += 1
+        else:
+            assert pins[i] == access[i + 1] and pins[i + 1] == access[i]
+            i += 2
+
+
+# ---------------------------------------------------------------------------
+# pruning invariants
+# ---------------------------------------------------------------------------
+@settings(max_examples=60, deadline=None)
+@given(
+    dists=st.lists(st.floats(0.01, 10.0), min_size=1, max_size=30),
+    radius=st.floats(0.1, 5.0),
+    dim=st.integers(2, 512),
+    lam=st.floats(0.5, 1.0),
+)
+def test_prune_budget_respected(dists, radius, dim, lam):
+    """Σ terms of pruned candidates ≤ 1 − λ (the Eq. 3 guarantee)."""
+    d = np.asarray(dists)
+    keep = prune_candidates(d, radius, dim, lam)
+    terms = miss_bound_terms(d, radius, dim)
+    assert terms[~keep].sum() <= (1 - lam) + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(dim=st.integers(2, 2048))
+def test_cap_constant_positive_finite(dim):
+    v = cap_constant(dim)
+    assert 0 < v < 10
+
+
+# ---------------------------------------------------------------------------
+# pair algebra invariants
+# ---------------------------------------------------------------------------
+@settings(max_examples=50, deadline=None)
+@given(pairs=st.lists(st.tuples(st.integers(0, 50), st.integers(0, 50)),
+                      max_size=100))
+def test_canonicalize_idempotent_and_selfless(pairs):
+    p = np.asarray(pairs, np.int64).reshape(-1, 2)
+    c1 = canonicalize_pairs(p)
+    c2 = canonicalize_pairs(c1)
+    assert np.array_equal(c1, c2)
+    if c1.size:
+        assert (c1[:, 0] < c1[:, 1]).all()
+    assert recall(c1, c1) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# elastic planning invariants
+# ---------------------------------------------------------------------------
+@settings(max_examples=60, deadline=None)
+@given(chips=st.integers(0, 2048),
+       batch=st.sampled_from([32, 128, 256, 512]))
+def test_plan_mesh_valid(chips, batch):
+    plan = plan_mesh(chips, global_batch=batch)
+    if plan is not None:
+        assert plan.chips <= max(chips, 1)
+        assert batch % (plan.data * plan.pod) == 0
+        assert plan.model >= 1 and (plan.model & (plan.model - 1)) == 0
+
+
+# ---------------------------------------------------------------------------
+# io accounting invariants
+# ---------------------------------------------------------------------------
+@settings(max_examples=50, deadline=None)
+@given(sizes=st.lists(st.integers(1, 100_000), min_size=1, max_size=50))
+def test_read_amplification_ge_one(sizes):
+    s = IOStats()
+    for n in sizes:
+        s.record_read(n)
+    assert s.read_amplification >= 1.0
+    assert s.bytes_read_total >= s.bytes_read_useful

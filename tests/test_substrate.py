@@ -1,0 +1,253 @@
+"""Substrate tests: checkpoint/restart, data pipeline, dedup, optimizer,
+gradient compression, elastic runtime, straggler mitigation, serving."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, restore_latest, save_checkpoint
+from repro.checkpoint.checkpoint import cleanup, list_checkpoints
+from repro.configs import get_config, smoke_config
+from repro.data import clustered_vectors
+from repro.data.dedup import UnionFind, semantic_dedup
+from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.runtime import (ElasticController, HeartbeatRegistry, HostMonitor,
+                           StepTimer, plan_mesh, rebalance_edges)
+from repro.train import AdamW, AdamWConfig, make_int8_compressor
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+class TestCheckpoint:
+    def _tree(self):
+        return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                "b": {"c": jnp.ones((2,), jnp.bfloat16)},
+                "step": jnp.asarray(7, jnp.int32)}
+
+    def test_roundtrip(self, tmp_path):
+        tree = self._tree()
+        save_checkpoint(str(tmp_path), 5, tree, extra={"note": "x"})
+        step, restored, extra = restore_latest(str(tmp_path), tree)
+        assert step == 5 and extra["note"] == "x"
+        for a, b in zip(jax.tree_util.tree_leaves(tree),
+                        jax.tree_util.tree_leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+    def test_bfloat16_preserved(self, tmp_path):
+        tree = self._tree()
+        save_checkpoint(str(tmp_path), 1, tree)
+        _, restored, _ = restore_latest(str(tmp_path), tree)
+        assert restored["b"]["c"].dtype == jnp.bfloat16
+
+    def test_latest_wins_and_cleanup(self, tmp_path):
+        tree = self._tree()
+        for s in (1, 2, 3, 4, 5):
+            save_checkpoint(str(tmp_path), s, tree)
+        cleanup(str(tmp_path), keep=2)
+        steps = [s for s, _ in list_checkpoints(str(tmp_path))]
+        assert steps == [4, 5]
+        step, _, _ = restore_latest(str(tmp_path), tree)
+        assert step == 5
+
+    def test_structure_mismatch_rejected(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, self._tree())
+        with pytest.raises(ValueError):
+            restore_latest(str(tmp_path), {"only": jnp.zeros(1)})
+
+    def test_async_manager(self, tmp_path):
+        m = CheckpointManager(str(tmp_path), keep=2, async_save=True)
+        tree = self._tree()
+        for s in (10, 20):
+            m.save(s, tree)
+        m.close()
+        step, _, _ = restore_latest(str(tmp_path), tree)
+        assert step == 20
+
+    def test_crash_tmp_ignored(self, tmp_path):
+        tree = self._tree()
+        save_checkpoint(str(tmp_path), 1, tree)
+        os.makedirs(str(tmp_path / "step_000000099.tmp"))  # simulated crash
+        step, _, _ = restore_latest(str(tmp_path), tree)
+        assert step == 1
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+class TestPipeline:
+    def test_deterministic_resume(self):
+        cfg = PipelineConfig(vocab=100, seq_len=8, global_batch=4, seed=3)
+        p1 = TokenPipeline(cfg)
+        batches = [p1.batch_at(s) for s in range(5)]
+        p2 = TokenPipeline(cfg)
+        p2.restore({"step": 3, "seed": 3, "host_id": 0})
+        np.testing.assert_array_equal(batches[3]["tokens"],
+                                      p2.batch_at(3)["tokens"])
+
+    def test_host_sharding_partitions_batch(self):
+        full = TokenPipeline(PipelineConfig(vocab=50, seq_len=4,
+                                            global_batch=8, seed=1))
+        shards = [TokenPipeline(PipelineConfig(
+            vocab=50, seq_len=4, global_batch=8, seed=1,
+            num_hosts=2, host_id=h)) for h in (0, 1)]
+        want = full.batch_at(0)["tokens"]
+        got = np.concatenate([s.batch_at(0)["tokens"] for s in shards])
+        np.testing.assert_array_equal(want, got)
+
+    def test_seed_mismatch_rejected(self):
+        p = TokenPipeline(PipelineConfig(vocab=10, seq_len=4,
+                                         global_batch=2, seed=1))
+        with pytest.raises(ValueError):
+            p.restore({"step": 0, "seed": 999})
+
+
+# ---------------------------------------------------------------------------
+# semantic dedup (the paper's flagship application)
+# ---------------------------------------------------------------------------
+class TestDedup:
+    def test_union_find(self):
+        uf = UnionFind(5)
+        uf.union(0, 1)
+        uf.union(1, 2)
+        assert uf.find(2) == 0
+        assert uf.find(4) == 4
+
+    def test_dedup_finds_planted_duplicates(self, tmp_path):
+        rng = np.random.default_rng(0)
+        base = clustered_vectors(600, 24, seed=9)
+        dups = base[:200] + rng.normal(scale=1e-3,
+                                       size=(200, 24)).astype(np.float32)
+        emb = np.concatenate([base, dups])
+        rep = semantic_dedup(emb, epsilon=0.05, workdir=str(tmp_path),
+                             recall_target=0.95)
+        # every planted duplicate pair is within eps → ≥ ~200 drops
+        assert rep.num_dropped >= 180
+        # survivors keep one representative per group
+        assert rep.num_docs - rep.num_dropped >= 580
+        assert rep.join_stats["read_amplification"] <= 1.2
+
+
+# ---------------------------------------------------------------------------
+# optimizer + compression
+# ---------------------------------------------------------------------------
+class TestOptimizer:
+    def test_adamw_reduces_quadratic_loss(self):
+        opt = AdamW(AdamWConfig(learning_rate=0.1, weight_decay=0.0,
+                                warmup_steps=0, total_steps=100))
+        params = {"w": jnp.asarray([3.0, -2.0])}
+        state = opt.init(params)
+
+        def loss_fn(p):
+            return jnp.sum(p["w"] ** 2)
+
+        for _ in range(60):
+            g = jax.grad(loss_fn)(params)
+            params, state, _ = opt.update(g, state, params)
+        assert float(loss_fn(params)) < 0.3
+
+    def test_grad_clipping_bounds_update(self):
+        opt = AdamW(AdamWConfig(learning_rate=1.0, clip_norm=1.0,
+                                weight_decay=0.0, warmup_steps=0))
+        params = {"w": jnp.zeros(3)}
+        state = opt.init(params)
+        huge = {"w": jnp.full(3, 1e9)}
+        new, state, metrics = opt.update(huge, state, params)
+        assert float(metrics["grad_norm"]) > 1e8
+        assert np.abs(np.asarray(new["w"])).max() < 10.0
+
+    def test_int8_compression_error_feedback(self):
+        """Error feedback: quantization residual carried, not lost —
+        the sum of applied gradients converges to the true sum."""
+        tf = make_int8_compressor()
+        g = {"w": jnp.asarray([1e-4, 0.5, -0.3])}
+        err = {"w": jnp.zeros(3)}
+        applied = jnp.zeros(3)
+        for _ in range(50):
+            deq, err = tf(g, err)
+            applied = applied + deq["w"]
+        np.testing.assert_allclose(np.asarray(applied) / 50,
+                                   np.asarray(g["w"]), atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# runtime: elastic + straggler
+# ---------------------------------------------------------------------------
+class TestRuntime:
+    def test_plan_mesh_prefers_pods(self):
+        p = plan_mesh(512, global_batch=256)
+        assert p.chips == 512 and p.pod == 2 and p.model == 16
+
+    def test_plan_mesh_shrinks_gracefully(self):
+        p = plan_mesh(200, global_batch=256)
+        assert p is not None and p.chips <= 200
+
+    def test_heartbeat_and_elastic_shrink(self):
+        t = [0.0]
+        reg = HeartbeatRegistry(timeout_s=10, clock=lambda: t[0])
+        for h in ("h0", "h1", "h2", "h3"):
+            reg.heartbeat(h, chips=128)
+        ctl = ElasticController(reg, global_batch=256)
+        ev = ctl.evaluate()
+        assert ev.new_plan.chips == 512
+        t[0] = 20.0  # h* all stale
+        reg.heartbeat("h0", chips=128)
+        reg.heartbeat("h1", chips=128)
+        ev = ctl.evaluate()
+        assert ev.kind == "shrink" and ev.new_plan.chips == 256
+
+    def test_straggler_quarantine_and_rebalance(self):
+        mon = HostMonitor(threshold=1.5, patience=2)
+        for _ in range(6):
+            for h in ("a", "b", "c"):
+                mon.record(h, 1.0)
+            mon.record("slow", 5.0)
+            mon.evaluate()
+        assert "slow" not in mon.healthy_hosts()
+        assign = {"a": [1], "b": [2], "c": [], "slow": [3, 4]}
+        out = rebalance_edges(assign, ["slow"], mon.healthy_hosts())
+        assert sorted(sum(out.values(), [])) == [1, 2, 3, 4]
+        assert "slow" not in out
+
+    def test_step_timer_outliers(self):
+        t = StepTimer()
+        for _ in range(20):
+            t.record(0.1)
+        assert t.record(1.0) is True
+        rep = t.report()
+        assert rep["outliers"] == 1 and rep["steps"] == 21
+
+
+# ---------------------------------------------------------------------------
+# end-to-end training loop (tiny arch) + serve engine
+# ---------------------------------------------------------------------------
+def test_train_loop_checkpoint_restart(tmp_path):
+    from repro.train import TrainConfig, train
+    cfg = smoke_config(get_config("qwen3-0.6b"))
+    tcfg = TrainConfig(steps=6, log_every=100, checkpoint_every=3,
+                       checkpoint_dir=str(tmp_path), global_batch=2,
+                       seq_len=16,
+                       optimizer=AdamWConfig(learning_rate=1e-3,
+                                             warmup_steps=1, total_steps=6))
+    out1 = train(cfg, tcfg)
+    assert np.isfinite(out1["final_loss"])
+    # restart: resumes from step 4 (checkpoint at step 3+1)
+    out2 = train(cfg, tcfg)
+    assert len(out2["loss_history"]) < len(out1["loss_history"])
+
+
+def test_serve_engine_batched_requests():
+    from repro.serve import ServeEngine
+    cfg = smoke_config(get_config("qwen3-0.6b"))
+    eng = ServeEngine(cfg, slots=2, max_seq=64)
+    rng = np.random.default_rng(0)
+    uids = [eng.submit(rng.integers(0, cfg.vocab, size=5), max_new_tokens=4)
+            for _ in range(4)]
+    results = eng.run()
+    assert set(results) == set(uids)
+    for toks in results.values():
+        assert len(toks) == 4
+        assert all(0 <= t < cfg.vocab for t in toks)
