@@ -12,8 +12,8 @@ import traceback
 from benchmarks import (fig7_baselines, fig8_recall, fig9_memory,
                         fig10_threshold, fig11_buckets, fig12_breakdown,
                         fig13_crossjoin, fig14_fragmentation, fig15_io,
-                        fig17_ablation, fig18_pruning, kernel_roofline,
-                        randomness)
+                        fig17_ablation, fig18_pruning, fig19_pipeline,
+                        kernel_roofline, randomness)
 
 MODULES = [
     ("fig7_baselines", fig7_baselines),
@@ -27,6 +27,7 @@ MODULES = [
     ("fig15_io", fig15_io),
     ("fig17_ablation", fig17_ablation),
     ("fig18_pruning", fig18_pruning),
+    ("fig19_pipeline", fig19_pipeline),
     ("randomness", randomness),
     ("kernel_roofline", kernel_roofline),
 ]

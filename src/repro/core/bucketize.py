@@ -155,6 +155,7 @@ def bucketize(store: FlatVectorStore, out_path: str, config: JoinConfig
     bstore = write_buckets(store, out_path, assignment, sizes, centers,
                            radii, config.block_rows)
     timings["write"] = time.perf_counter() - t0
+    bstore.read_latency_s = config.emulate_read_latency_s
 
     meta = BucketMeta(centers=centers, radii=radii, sizes=sizes)
     return bstore, meta, timings

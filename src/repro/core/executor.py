@@ -11,7 +11,13 @@ distance (coordinates 1e15) and can never pass the ε threshold.
 
 Batched dispatch: edges are accumulated into fixed-size batches and verified
 with one vmapped kernel call (cache-evicted slabs stay alive via the pending
-batch's references, so batching never races the eviction schedule).
+batch's references — Python refs in sync mode, buffer-pool pins in prefetch
+mode — so batching never races the eviction schedule).
+
+I/O modes (``JoinConfig.io_mode``): ``"sync"`` reads every missed bucket
+inline; ``"prefetch"`` consumes slabs from ``repro.io``'s schedule-driven
+prefetcher, overlapping SSD reads with verification. Both replay the same
+cache schedule, so the verified pair set is identical.
 """
 from __future__ import annotations
 
@@ -46,7 +52,13 @@ def _verify_batch(u: jax.Array, v: jax.Array, eps2: float) -> jax.Array:
 
 
 class BucketCache:
-    """Padded bucket slabs (host staging), driven by the cache schedule."""
+    """Padded bucket slabs (host staging), driven by the cache schedule.
+
+    The sync I/O backend: ``load`` reads inline on the executor thread.
+    Shares the ``checkout``/``release`` surface with
+    ``repro.io.PrefetchedBucketCache`` (here release is a no-op — Python
+    references keep evicted slabs alive for pending verify batches).
+    """
 
     def __init__(self, store: BucketedVectorStore, capacity_rows: int):
         self.store = store
@@ -56,6 +68,8 @@ class BucketCache:
 
     def __contains__(self, b: int) -> bool:
         return b in self._slabs
+
+    load_issued = True  # sync loads never need a pipeline to catch up
 
     def load(self, b: int) -> None:
         vecs, ids = self.store.read_bucket(b)
@@ -72,6 +86,19 @@ class BucketCache:
 
     def get(self, b: int):
         return self._slabs[b]
+
+    def rows(self, b: int) -> int:
+        return self._slabs[b][2]
+
+    def checkout(self, b: int):
+        vecs, ids, n = self._slabs[b]
+        return (vecs, ids, n, None)
+
+    def release(self, entry) -> None:
+        pass
+
+    def close(self) -> None:
+        pass
 
     @property
     def resident(self) -> int:
@@ -120,9 +147,27 @@ class JoinExecutor:
         return tasks, access_seq, schedule, plan_seconds
 
     # -- execution -----------------------------------------------------------
+    def _make_cache(self, schedule):
+        """Cache backend per JoinConfig.io_mode (+ pipeline stats or None)."""
+        if self.config.io_mode != "prefetch":
+            return BucketCache(self.store, self.bucket_capacity), None
+        from repro.io import PipelineStats, PrefetchedBucketCache
+        cap_buckets = min(self.cache_buckets, self.meta.num_buckets or 1)
+        pool_slabs = self.config.io_pool_slabs
+        if pool_slabs is None:
+            pool_slabs = cap_buckets + self.config.io_lookahead
+        pool_slabs = max(pool_slabs, cap_buckets + 1)  # liveness floor
+        stats = PipelineStats()
+        cache = PrefetchedBucketCache(
+            self.store, self.bucket_capacity, schedule.actions,
+            lookahead=self.config.io_lookahead, pool_slabs=pool_slabs,
+            num_threads=self.config.io_threads, pad_value=PAD_COORD,
+            stats=stats)
+        return cache, stats
+
     def run(self, graph: BucketGraph) -> JoinResult:
         tasks, access_seq, schedule, plan_seconds = self.plan(graph)
-        cache = BucketCache(self.store, self.bucket_capacity)
+        cache, pstats = self._make_cache(schedule)
         eps = float(self.config.epsilon)
 
         pairs_out: list[np.ndarray] = []
@@ -135,8 +180,11 @@ class JoinExecutor:
         eps2 = eps * eps
         cap = self.bucket_capacity
         batch: list[tuple] = []  # (entry_a, entry_b, is_intra)
+        io_wait = 0.0   # executor time blocked in cache.load
+        compute_t = 0.0  # executor time in verify/flush
 
         def ensure(b: int) -> None:
+            nonlocal io_wait
             nonlocal ai
             bb, is_hit, victim = actions[ai]
             assert bb == b, f"schedule desync at access {ai}: {bb} != {b}"
@@ -144,12 +192,21 @@ class JoinExecutor:
             if not is_hit:
                 if victim is not None:
                     cache.evict(victim)
+                if not cache.load_issued:
+                    # prefetcher is behind AND may be blocked on the pool:
+                    # flush pending pins so a slab frees up (liveness)
+                    if batch and pstats is not None:
+                        pstats.add("flush_on_stall", 1)
+                    flush()
+                t0 = time.perf_counter()
                 cache.load(b)
+                io_wait += time.perf_counter() - t0
 
         def flush() -> None:
-            nonlocal dc
+            nonlocal dc, compute_t
             if not batch:
                 return
+            t_flush = time.perf_counter()
             E = len(batch)
             u = np.empty((VERIFY_BATCH, cap, self.store.dim), np.float32)
             v = np.empty_like(u)
@@ -176,8 +233,10 @@ class JoinExecutor:
                 else:
                     dc += na * nb
                 if self.attribute_mask is not None:
-                    m = m & self.attribute_mask[ea[1]][:, None] \
-                          & self.attribute_mask[eb[1]][None, :]
+                    # slice to the live rows: prefetch-mode id slabs are
+                    # capacity-padded with -1 past each bucket's rows
+                    m = m & self.attribute_mask[ea[1][:na]][:, None] \
+                          & self.attribute_mask[eb[1][:nb]][None, :]
                 rows, cols = np.nonzero(m)
                 if rows.size:
                     diff = ea[0][rows] - eb[0][cols]
@@ -185,26 +244,32 @@ class JoinExecutor:
                     pairs_out.append(np.stack([ea[1][rows], eb[1][cols]],
                                               axis=1).astype(np.int64))
                     dists_out.append(d.astype(np.float32))
+            for ea, eb, _ in batch:  # drop the batch's slab pins
+                cache.release(ea)
+                cache.release(eb)
             batch.clear()
+            compute_t += time.perf_counter() - t_flush
 
-        def enqueue(ea, eb, intra: bool) -> None:
-            batch.append((ea, eb, intra))
+        def enqueue(bu: int, bv: int, intra: bool) -> None:
+            batch.append((cache.checkout(bu), cache.checkout(bv), intra))
             if len(batch) >= VERIFY_BATCH:
                 flush()
 
-        for task in tasks:
-            if task[0] == "touch":
-                b = int(task[1])
-                ensure(b)
-                entry = cache.get(b)
-                if self.intra_join and entry[2] >= 2:
-                    enqueue(entry, entry, True)
-            else:
-                _, u, v = task
-                ensure(int(u))
-                ensure(int(v))
-                enqueue(cache.get(int(u)), cache.get(int(v)), False)
-        flush()
+        try:
+            for task in tasks:
+                if task[0] == "touch":
+                    b = int(task[1])
+                    ensure(b)
+                    if self.intra_join and cache.rows(b) >= 2:
+                        enqueue(b, b, True)
+                else:
+                    _, u, v = task
+                    ensure(int(u))
+                    ensure(int(v))
+                    enqueue(int(u), int(v), False)
+            flush()
+        finally:
+            cache.close()
         exec_seconds = time.perf_counter() - t0
 
         if pairs_out:
@@ -221,6 +286,14 @@ class JoinExecutor:
             pairs = np.zeros((0, 2), np.int64)
             dists = np.zeros(0, np.float32)
 
+        io_stats = self.store.stats.snapshot()
+        timings = {"plan": plan_seconds, "execute": exec_seconds,
+                   "io_wait": io_wait, "compute": compute_t}
+        if pstats is not None:
+            pstats.add("io_wait_s", io_wait)
+            pstats.add("compute_s", compute_t)
+            io_stats["pipeline"] = pstats.snapshot()
+
         from repro.core.bucket_graph import candidate_pair_count
         return JoinResult(
             pairs=pairs, distances=dists,
@@ -228,6 +301,6 @@ class JoinExecutor:
             num_candidate_pairs=candidate_pair_count(graph, self.meta),
             cache_hits=schedule.hits, cache_misses=schedule.misses,
             bucket_loads=cache.loads,
-            io_stats=self.store.stats.snapshot(),
-            timings={"plan": plan_seconds, "execute": exec_seconds},
+            io_stats=io_stats,
+            timings=timings,
         )

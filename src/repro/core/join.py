@@ -10,6 +10,7 @@ once) and cache the smaller.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 import tempfile
 import time
@@ -27,12 +28,18 @@ from repro.store.vector_store import FlatVectorStore
 
 def similarity_self_join(store: FlatVectorStore, config: JoinConfig,
                          workdir: str | None = None,
-                         attribute_mask=None) -> JoinResult:
+                         attribute_mask=None,
+                         io_mode: str | None = None) -> JoinResult:
     """SSJ over a flat on-disk dataset under a memory budget.
 
     ``attribute_mask`` (paper §3 extension): (N,) bool predicate results;
     only pairs where both sides pass are verified/returned.
+
+    ``io_mode`` overrides ``config.io_mode`` ("sync" | "prefetch") without
+    rebuilding the config; the result pair set is identical either way.
     """
+    if io_mode is not None:
+        config = dataclasses.replace(config, io_mode=io_mode)
     workdir = workdir or tempfile.mkdtemp(prefix="diskjoin_")
     os.makedirs(workdir, exist_ok=True)
     timings: dict[str, float] = {}
@@ -58,12 +65,16 @@ def similarity_self_join(store: FlatVectorStore, config: JoinConfig,
 
 def similarity_cross_join(store_x: FlatVectorStore, store_y: FlatVectorStore,
                           config: JoinConfig, workdir: str | None = None,
-                          reorder_larger: bool = True) -> JoinResult:
+                          reorder_larger: bool = True,
+                          io_mode: str | None = None) -> JoinResult:
     """Cross-join (§3 extension): bipartite graph over two bucketings.
 
     ``reorder_larger=True`` is the paper's DiskJoin1 (stream the larger
     dataset in schedule order, cache the smaller); False is DiskJoin2.
+    ``io_mode`` overrides ``config.io_mode`` as in ``similarity_self_join``.
     """
+    if io_mode is not None:
+        config = dataclasses.replace(config, io_mode=io_mode)
     workdir = workdir or tempfile.mkdtemp(prefix="diskjoin_x_")
     os.makedirs(workdir, exist_ok=True)
 
@@ -158,6 +169,18 @@ class _CombinedBipartiteStore:
         vecs, ids = self.cache.read_bucket(b - self.off)
         return vecs, ids + self._offs[1]
 
+    def read_bucket_into(self, b: int, out_vecs, out_ids,
+                         pad_value: float = 0.0) -> int:
+        """Prefetcher hot path: delegate to the owning side, offset ids."""
+        if b < self.off:
+            side, local, off = self.drive, b, self._offs[0]
+        else:
+            side, local, off = self.cache, b - self.off, self._offs[1]
+        n = side.read_bucket_into(local, out_vecs, out_ids,
+                                  pad_value=pad_value)
+        out_ids[:n] += off
+        return n
+
     def snapshot_stats(self) -> dict:
         return self._live[0].merge(self._live[1]).snapshot()
 
@@ -169,5 +192,8 @@ class _CrossJoinExecutor(JoinExecutor):
 
     def run(self, graph) -> JoinResult:
         res = super().run(graph)
+        pipeline = res.io_stats.get("pipeline")
         res.io_stats = self.store.snapshot_stats()
+        if pipeline is not None:
+            res.io_stats["pipeline"] = pipeline
         return res

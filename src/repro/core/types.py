@@ -31,6 +31,18 @@ class JoinConfig:
       pad_align: bucket row padding alignment (128 = MXU tile; smaller is
         fine for CPU validation runs).
       seed: RNG seed for center sampling.
+      io_mode: "sync" (read buckets inline, serial read→verify loop) or
+        "prefetch" (repro.io subsystem: schedule-driven background reads
+        overlapped with verification; identical result pair set).
+      io_lookahead: max bucket loads the prefetcher runs ahead of the
+        executor (bounds prefetch staging memory and queue depth).
+      io_pool_slabs: slab count of the prefetch buffer pool; None sizes it
+        to cache capacity + io_lookahead. Values below cache capacity + 1
+        are raised to that floor (pipeline liveness).
+      io_threads: background reader threads for prefetch mode.
+      emulate_read_latency_s: per-bucket-read sleep applied to the
+        bucketed store — restores the paper's SSD-latency-bound regime on
+        page-cached memmaps (benchmarks only; 0 disables).
     """
 
     epsilon: float
@@ -48,6 +60,16 @@ class JoinConfig:
     max_bucket_rows: Optional[int] = None
     pad_align: int = 128
     seed: int = 0
+    io_mode: str = "sync"
+    io_lookahead: int = 8
+    io_pool_slabs: Optional[int] = None
+    io_threads: int = 2
+    emulate_read_latency_s: float = 0.0
+
+    def __post_init__(self):
+        if self.io_mode not in ("sync", "prefetch"):
+            raise ValueError(f"io_mode must be 'sync' or 'prefetch', "
+                             f"got {self.io_mode!r}")
 
     def resolve_num_buckets(self, num_vectors: int) -> int:
         if self.num_buckets is not None:

@@ -1,0 +1,11 @@
+"""Distribution substrate: logical-axis sharding rules + pipeline parallel.
+
+``repro.dist.sharding`` — flax-style logical axis annotations resolved
+against an ambient mesh (set_mesh / axis_rules); every model file annotates
+activations with ``shard(x, "batch", "seq", ...)`` and the launcher derives
+parameter/batch/cache shardings from the same rule table.
+
+``repro.dist.pipeline`` — GPipe-style pipeline parallelism over a
+``stage`` mesh axis (shard_map + ppermute rotation).
+"""
+from repro.dist import sharding  # noqa: F401

@@ -1,0 +1,225 @@
+"""Logical-axis sharding (DESIGN §5).
+
+Model code annotates *logical* axes (``batch``, ``heads``, ``mlp``, ...);
+this module resolves them to physical mesh axes through a mutable rule
+table, flax ``logical_axis_rules`` style:
+
+    shd.set_mesh(mesh)
+    with shd.axis_rules(cache_seq=("model",)):
+        y = shard(x, "batch", "seq", "embed")
+
+Resolution is permissive by design: a logical axis with no rule, a rule
+naming mesh axes that don't exist, or a dimension the mesh axes don't
+divide all resolve to *replicated* — model code never has to know the mesh
+shape. With no mesh set, ``shard`` is the identity, so all model files run
+unmodified on one device.
+
+``param_shardings`` derives a parameter-tree sharding from leaf *path
+names* (the same convention ``launch.steps.cache_shardings`` uses for
+decode caches): embedding tables and expert stacks shard over ``model``;
+``fsdp=True`` additionally shards the largest remaining dim over ``data``
+(ZeRO-3 style parameter sharding).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# -- rule table --------------------------------------------------------------
+# logical axis -> tuple of physical mesh axes (joint sharding, flax-style).
+# () = explicitly replicated. Absent = no rule (has_rule -> False), also
+# replicated. Feature-flag rules ("moe_a2a", "moe_tokens") never name an
+# array dimension; they gate alternative dataflows via has_rule().
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": (),
+    "embed": (),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "expert_mlp": ("model",),
+    "experts": ("model",),
+    "capacity": (),
+    "cache_seq": (),
+}
+
+_state = threading.local()
+
+
+def _rules() -> dict[str, tuple[str, ...]]:
+    if not hasattr(_state, "rules"):
+        _state.rules = dict(DEFAULT_RULES)
+    return _state.rules
+
+
+def _mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    """Install (or clear, with None) the ambient mesh ``shard`` targets."""
+    _state.mesh = mesh
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _mesh()
+
+
+def has_rule(name: str) -> bool:
+    """True iff logical axis ``name`` has a non-empty rule installed."""
+    return bool(_rules().get(name))
+
+
+@contextlib.contextmanager
+def axis_rules(**rules):
+    """Override logical→mesh rules within a scope.
+
+    Values may be a mesh-axis name, a tuple of names, True (alias for a
+    bare feature flag, resolved to ("model",)), or None/() to disable.
+    """
+    old = dict(_rules())
+    table = _rules()
+    for k, v in rules.items():
+        table[k] = _tuplize(v)
+    try:
+        yield
+    finally:
+        _state.rules = old
+
+
+def _tuplize(v) -> tuple[str, ...]:
+    if v is None or v is False:
+        return ()
+    if v is True:
+        return ("model",)
+    if isinstance(v, str):
+        return (v,)
+    return tuple(v)
+
+
+# -- resolution --------------------------------------------------------------
+def _resolve_dim(mesh: Mesh, dim: int, logical: Optional[str],
+                 used: set[str]):
+    """Logical axis -> PartitionSpec entry for one dim (or None)."""
+    if logical is None:
+        return None
+    axes = [a for a in _rules().get(logical, ())
+            if a in mesh.shape and a not in used]
+    if not axes:
+        return None
+    prod = 1
+    for a in axes:
+        prod *= mesh.shape[a]
+    if prod == 0 or dim % prod != 0:
+        return None
+    used.update(axes)
+    return axes[0] if len(axes) == 1 else tuple(axes)
+
+
+def logical_spec(mesh: Mesh, shape, *axes) -> NamedSharding:
+    """NamedSharding for ``shape`` annotated with logical ``axes``.
+
+    Shorter axis lists are right-aligned is NOT assumed — callers pass one
+    entry per dim (None for replicated); extra dims beyond the list are
+    replicated.
+    """
+    used: set[str] = set()
+    entries = []
+    for i, dim in enumerate(shape):
+        logical = axes[i] if i < len(axes) else None
+        entries.append(_resolve_dim(mesh, int(dim), logical, used))
+    return NamedSharding(mesh, P(*entries))
+
+
+def shard(x: jax.Array, *axes) -> jax.Array:
+    """Constrain ``x`` to its logical-axis sharding under the ambient mesh.
+
+    Identity when no mesh is installed (single-device runs) or when the
+    constraint is invalid in the current tracing context (e.g. inside a
+    fully-manual shard_map body, where collectives own the layout).
+    """
+    mesh = _mesh()
+    if mesh is None:
+        return x
+    sharding = logical_spec(mesh, x.shape, *axes)
+    try:
+        return jax.lax.with_sharding_constraint(x, sharding)
+    except Exception:
+        return x
+
+
+# -- parameter shardings -----------------------------------------------------
+def _key_str(k) -> str:
+    """Stringify one jax tree-path key (Dict/Attr/Sequence)."""
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "name"):
+        return str(k.name)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+# leaf-name patterns -> which dim carries the ``model`` axis. (-1 = last,
+# 0 = first.) Output projections shard their *input* (contracting) dim so
+# the preceding activation sharding is consumed without a reshard.
+_MODEL_DIM_BY_NAME = {
+    "table": 0,      # (V, d) embedding: vocab over model
+    "router": -1,    # (d, E): experts over model
+    "w_gate": -1, "w_up": -1, "w1": -1,
+    "wq": -1, "wk": -1, "wv": -1, "w_in": -1,
+    "w_down": 0, "wo": 0, "w2": 0, "w_out": 0,
+}
+
+
+def _param_spec(mesh: Mesh, pstr: str, shape, *, fsdp: bool) -> P:
+    nd = len(shape)
+    entries: list = [None] * nd
+    model_ok = "model" in mesh.shape
+    data_ok = "data" in mesh.shape
+    name = pstr.rsplit("/", 1)[-1]
+
+    if nd >= 2 and model_ok:
+        m = mesh.shape["model"]
+        dim = _MODEL_DIM_BY_NAME.get(name)
+        if nd == 3 and "experts" in pstr:
+            dim = 0  # stacked (E, din, dout): expert-parallel over model
+        if dim is None:
+            # fallback: largest divisible dim
+            order = sorted(range(nd), key=lambda i: -shape[i])
+            dim = next((i for i in order if shape[i] % m == 0), None)
+        else:
+            dim = dim % nd
+            if shape[dim] % m != 0:
+                dim = None
+        if dim is not None:
+            entries[dim] = "model"
+
+    if fsdp and nd >= 2 and data_ok:
+        d = mesh.shape["data"]
+        order = sorted(range(nd), key=lambda i: -shape[i])
+        for i in order:
+            if entries[i] is None and shape[i] % d == 0:
+                entries[i] = "data"
+                break
+    return P(*entries)
+
+
+def param_shardings(params, mesh: Mesh, *, fsdp: bool = False):
+    """NamedSharding tree for a parameter tree (arrays or ShapeDtypeStructs).
+
+    2-D+ leaves shard over ``model`` by path-name convention; ``fsdp=True``
+    additionally spreads the largest remaining dim over ``data``. Scalars,
+    vectors (norm scales, biases) and non-divisible dims replicate.
+    """
+    def one(path, leaf):
+        pstr = "/".join(_key_str(k) for k in path)
+        return NamedSharding(mesh, _param_spec(mesh, pstr, leaf.shape,
+                                               fsdp=fsdp))
+
+    return jax.tree_util.tree_map_with_path(one, params)

@@ -1,0 +1,30 @@
+"""Async prefetching I/O subsystem (paper §4 + §5 beyond-paper extension).
+
+The orchestration phase materializes the *exact* future access sequence and
+cache schedule, so the executor has perfect knowledge of every bucket read
+it will ever issue. This package exploits that to overlap SSD reads with
+Pallas verification:
+
+  ``buffer_pool``  — fixed pool of pre-padded bucket slabs with pin/unpin
+                     refcounting (no hot-path allocation; pending verify
+                     batches keep evicted slabs alive via pins).
+  ``prefetcher``   — ``SchedulePrefetcher`` walks the precomputed cache
+                     schedule ahead of the executor with a bounded
+                     lookahead window, issuing reads on a worker pool with
+                     pool-exhaustion backpressure. ``PrefetchedBucketCache``
+                     is the executor-facing frontend (same surface as the
+                     sync ``BucketCache``).
+  ``pipeline``     — ``PipelineStats``: io_wait/compute split, overlap
+                     efficiency, queue depth; surfaced in
+                     ``JoinResult.timings`` / ``io_stats["pipeline"]``.
+
+Selected via ``JoinConfig.io_mode`` ("sync" | "prefetch"); result pair
+sets are identical in both modes by construction — only *when* reads
+happen changes, never which bytes end up in front of the kernel.
+"""
+from repro.io.buffer_pool import BufferPool
+from repro.io.pipeline import PipelineStats
+from repro.io.prefetcher import PrefetchedBucketCache, SchedulePrefetcher
+
+__all__ = ["BufferPool", "PipelineStats", "PrefetchedBucketCache",
+           "SchedulePrefetcher"]

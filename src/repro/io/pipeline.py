@@ -1,0 +1,57 @@
+"""Pipeline telemetry: how much disk time the prefetcher actually hid.
+
+``io_wait_s`` is the executor-observed stall (time blocked on a load that
+wasn't ready); ``read_s`` is the wall time workers spent inside reads. A
+perfect pipeline has io_wait → 0 with read_s unchanged, so
+
+    overlap_efficiency = hidden / read_s,  hidden = max(0, read_s - io_wait)
+
+(1.0 = all I/O behind compute, 0.0 = fully serial — the sync executor by
+construction). Queue depth and backpressure counters come from the
+prefetcher/pool and size the lookahead/pool knobs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+
+@dataclasses.dataclass
+class PipelineStats:
+    io_wait_s: float = 0.0      # executor stall waiting on loads
+    compute_s: float = 0.0      # executor time in verify/flush
+    read_s: float = 0.0         # worker wall time inside bucket reads
+    loads: int = 0              # loads consumed by the executor
+    stalls: int = 0             # loads that were not ready when needed
+    flush_on_stall: int = 0     # early batch flushes to release pins
+    max_queue_depth: int = 0    # max issued-not-consumed loads
+    pool_slabs: int = 0
+    max_slabs_in_use: int = 0
+    blocked_acquires: int = 0   # pool-exhaustion backpressure events
+    lookahead: int = 0
+
+    def __post_init__(self) -> None:
+        self._lock = threading.Lock()
+
+    def add(self, field: str, amount) -> None:
+        with self._lock:
+            setattr(self, field, getattr(self, field) + amount)
+
+    def observe_depth(self, depth: int) -> None:
+        with self._lock:
+            self.max_queue_depth = max(self.max_queue_depth, depth)
+
+    @property
+    def overlap_efficiency(self) -> float:
+        if self.read_s <= 0:
+            return 1.0
+        return max(0.0, self.read_s - self.io_wait_s) / self.read_s
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            d = {f.name: getattr(self, f.name)
+                 for f in dataclasses.fields(PipelineStats)}
+        d["overlap_efficiency"] = (
+            max(0.0, d["read_s"] - d["io_wait_s"]) / d["read_s"]
+            if d["read_s"] > 0 else 1.0)
+        return d

@@ -1,0 +1,206 @@
+"""Schedule-driven prefetching: perfect-future reads ahead of the executor.
+
+The cache schedule (``repro.core.cache``) already fixes, offline, exactly
+which accesses miss and in what order — the same offline knowledge the
+paper uses for Belady eviction (§4.2). ``SchedulePrefetcher`` therefore
+needs no prediction: an issue thread walks the schedule's miss sequence up
+to ``lookahead`` loads ahead of the executor, takes a slab from the
+``BufferPool`` (blocking when the pool is exhausted — backpressure), and
+hands the read to a small worker pool. The executor consumes loads in
+schedule order via ``pop_next``; out-of-order *completion* is fine,
+consumption is serialized by load index.
+
+Liveness: the executor evicts the scheduled victim (releasing its
+residency pin) and flushes its pending verify batch (releasing batch pins)
+*before* blocking on a load that has not been issued yet, so a pool with
+at least (cache capacity + 1) slabs always frees a slab for the load the
+executor is about to wait on.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+from repro.io.buffer_pool import BufferPool
+from repro.io.pipeline import PipelineStats
+
+
+class SchedulePrefetcher:
+    """Issues the schedule's bucket loads ahead of time into pool slabs."""
+
+    def __init__(self, store, actions, pool: BufferPool, *,
+                 lookahead: int = 8, num_threads: int = 2,
+                 stats: PipelineStats | None = None,
+                 pad_value: float = 0.0):
+        self.store = store
+        self.pool = pool
+        self.lookahead = max(1, int(lookahead))
+        self.stats = stats if stats is not None else PipelineStats()
+        self.pad_value = pad_value
+        # the miss sequence: the only accesses that touch the disk
+        self._loads = [int(b) for b, is_hit, _ in actions if not is_hit]
+        self._results: dict[int, tuple[int, int] | BaseException] = {}
+        self._issued = 0
+        self._consumed = 0
+        self._closed = False
+        self._cond = threading.Condition()
+        self._workers = ThreadPoolExecutor(
+            max_workers=max(1, int(num_threads)),
+            thread_name_prefix="diskjoin-io")
+        self._issuer = threading.Thread(target=self._issue_loop,
+                                        name="diskjoin-io-issue", daemon=True)
+        self._issuer.start()
+
+    # -- producer side -------------------------------------------------------
+    def _issue_loop(self) -> None:
+        try:
+            for k, b in enumerate(self._loads):
+                with self._cond:
+                    while (k - self._consumed >= self.lookahead
+                           and not self._closed):
+                        self._cond.wait()
+                    if self._closed:
+                        return
+                slot = self.pool.acquire()  # backpressure: blocks when full
+                with self._cond:
+                    if self._closed:
+                        self.pool.unpin(slot)
+                        return
+                    self._issued = k + 1
+                    self.stats.observe_depth(self._issued - self._consumed)
+                self._workers.submit(self._read, k, b, slot)
+        except BaseException as e:  # pool closed mid-acquire, etc.
+            with self._cond:
+                if not self._closed:
+                    self._results[self._issued] = e
+                    self._issued += 1
+                    self._cond.notify_all()
+
+    def _read(self, k: int, b: int, slot: int) -> None:
+        t0 = time.perf_counter()
+        try:
+            n = self.store.read_bucket_into(
+                b, self.pool.vecs(slot), self.pool.ids(slot),
+                pad_value=self.pad_value)
+            result: tuple[int, int] | BaseException = (slot, n)
+        except BaseException as e:
+            self.pool.unpin(slot)
+            result = e
+        self.stats.add("read_s", time.perf_counter() - t0)
+        with self._cond:
+            self._results[k] = result
+            self._cond.notify_all()
+
+    # -- consumer side -------------------------------------------------------
+    @property
+    def next_issued(self) -> bool:
+        """True iff the next load to consume has already been issued."""
+        with self._cond:
+            return self._issued > self._consumed
+
+    def pop_next(self) -> tuple[int, int, int]:
+        """Next scheduled load, in order → (bucket, slot, rows). Blocks
+        (and counts a stall) if the read hasn't completed yet."""
+        k = self._consumed
+        if k >= len(self._loads):
+            raise IndexError("prefetcher exhausted: schedule desync")
+        with self._cond:
+            if k not in self._results:
+                self.stats.add("stalls", 1)
+                while k not in self._results and not self._closed:
+                    self._cond.wait()
+                if self._closed and k not in self._results:
+                    raise RuntimeError("prefetcher closed mid-run")
+            res = self._results.pop(k)
+            self._consumed = k + 1
+            self.stats.add("loads", 1)
+            self._cond.notify_all()
+        if isinstance(res, BaseException):
+            raise res
+        slot, n = res
+        return self._loads[k], slot, n
+
+    def close(self) -> None:
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+        self.pool.close()
+        self._issuer.join(timeout=10)
+        self._workers.shutdown(wait=True)
+        # release any loads that completed but were never consumed
+        with self._cond:
+            for res in self._results.values():
+                if not isinstance(res, BaseException):
+                    self.pool.unpin(res[0])
+            self._results.clear()
+
+
+class PrefetchedBucketCache:
+    """Executor-facing cache frontend backed by the prefetch pipeline.
+
+    Mirrors the sync ``BucketCache`` surface (load/evict/rows/resident)
+    plus explicit ``checkout``/``release`` pinning so pending verify
+    batches keep their slabs alive across evictions.
+    """
+
+    def __init__(self, store, capacity_rows: int, actions, *,
+                 lookahead: int = 8, pool_slabs: int | None = None,
+                 num_threads: int = 2, pad_value: float = 0.0,
+                 stats: PipelineStats | None = None):
+        self.stats = stats if stats is not None else PipelineStats()
+        self.capacity_rows = int(capacity_rows)
+        if pool_slabs is None:
+            raise ValueError("pool_slabs must be sized by the caller "
+                             "(>= cache capacity + 1 for liveness)")
+        self.pool = BufferPool(pool_slabs, capacity_rows, store.dim)
+        self.stats.pool_slabs = pool_slabs
+        self.stats.lookahead = int(lookahead)
+        self.prefetcher = SchedulePrefetcher(
+            store, actions, self.pool, lookahead=lookahead,
+            num_threads=num_threads, stats=self.stats, pad_value=pad_value)
+        self._slots: dict[int, tuple[int, int]] = {}  # bucket -> (slot, rows)
+        self.loads = 0
+
+    def __contains__(self, b: int) -> bool:
+        return b in self._slots
+
+    @property
+    def resident(self) -> int:
+        return len(self._slots)
+
+    @property
+    def load_issued(self) -> bool:
+        return self.prefetcher.next_issued
+
+    def load(self, b: int) -> None:
+        bucket, slot, n = self.prefetcher.pop_next()
+        if bucket != b:
+            raise AssertionError(
+                f"prefetch desync: schedule wants {b}, stream has {bucket}")
+        self._slots[b] = (slot, n)
+        self.loads += 1
+
+    def evict(self, b: int) -> None:
+        ent = self._slots.pop(b, None)
+        if ent is not None:
+            self.pool.unpin(ent[0])  # drop the residency pin
+
+    def rows(self, b: int) -> int:
+        return self._slots[b][1]
+
+    def checkout(self, b: int):
+        """Pin bucket ``b``'s slab for a verify batch → (vecs, ids, n, slot)."""
+        slot, n = self._slots[b]
+        self.pool.pin(slot)
+        return (self.pool.vecs(slot), self.pool.ids(slot), n, slot)
+
+    def release(self, entry) -> None:
+        self.pool.unpin(entry[3])
+
+    def close(self) -> None:
+        self.stats.max_slabs_in_use = self.pool.max_in_use
+        self.stats.blocked_acquires = self.pool.blocked_acquires
+        self.prefetcher.close()

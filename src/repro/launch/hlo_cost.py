@@ -111,34 +111,83 @@ def _split_computations(text: str) -> dict[str, list[str]]:
     return comps
 
 
+def _split_args(argstr: str) -> list[str]:
+    """Split an HLO operand list on top-level commas only (shapes carry
+    commas inside ``[...]``/``{...}``)."""
+    parts: list[str] = []
+    depth = 0
+    cur: list[str] = []
+    for ch in argstr:
+        if ch == "," and depth == 0:
+            parts.append("".join(cur).strip())
+            cur = []
+            continue
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        cur.append(ch)
+    if cur:
+        parts.append("".join(cur).strip())
+    return parts
+
+
+def _operand_type(tok: str, shapes: dict[str, str]) -> str:
+    """Type string of one operand token. Newer HLO prints the type inline
+    (``f32[128,64]{1,0} %name``); older prints just ``%name`` — fall back
+    to the shape table built from earlier op results."""
+    m = _SHAPE_RE.search(tok)
+    if m and m.group(1) in _DTYPE_BYTES:
+        return tok
+    name = tok.split()[-1].lstrip("%") if tok else ""
+    return shapes.get(name, "")
+
+
+_CALL_HEAD_RE = re.compile(r"=\s*(?:\([^)]*\)|\S+)\s+[\w\-]+\(")
+
+
+def _op_args(line: str) -> list[str]:
+    """Operand tokens of an op line, with balanced-paren extraction so
+    tuple-typed inline operands survive (a ``[^)]*`` cut would not)."""
+    m = _CALL_HEAD_RE.search(line)
+    if not m:
+        return []
+    start = m.end()
+    depth = 1
+    i = start
+    while i < len(line) and depth:
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+        i += 1
+    if depth:
+        return []
+    return _split_args(line[start:i - 1])
+
+
 def _dot_flops(line: str, result_type: str,
                shapes: dict[str, str]) -> float:
-    operands = re.findall(r"\(([^)]*)\)", line)
-    args = re.match(r".*?=\s*\S+\s+[\w\-]+\(([^)]*)\)", line)
+    args = _op_args(line)
     contract = 1
     m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
     if m and args:
-        lhs_name = args.group(1).split(",")[0].strip().lstrip("%")
-        lhs_type = shapes.get(lhs_name, "")
-        parsed = _parse_shapes(lhs_type)
+        parsed = _parse_shapes(_operand_type(args[0], shapes))
         if parsed:
             dims = parsed[0][1]
             for di in m.group(1).split(","):
                 if di and int(di) < len(dims):
                     contract *= dims[int(di)]
-    del operands
     return 2.0 * _shape_elems(result_type) * contract
 
 
 def _conv_flops(line: str, result_type: str, shapes: dict[str, str]) -> float:
-    args = re.match(r".*?=\s*\S+\s+[\w\-]+\(([^)]*)\)", line)
+    args = _op_args(line)
     kernel_elems = 1
-    if args:
-        names = [a.strip().lstrip("%") for a in args.group(1).split(",")]
-        if len(names) >= 2:
-            parsed = _parse_shapes(shapes.get(names[1], ""))
-            if parsed:
-                kernel_elems = math.prod(parsed[0][1] or [1])
+    if len(args) >= 2:
+        parsed = _parse_shapes(_operand_type(args[1], shapes))
+        if parsed:
+            kernel_elems = math.prod(parsed[0][1] or [1])
     return 2.0 * _shape_elems(result_type) * max(1, kernel_elems // 1)
 
 
@@ -214,21 +263,15 @@ def analyze_hlo(text: str, default_group: int = 256) -> dict:
             if in_hi:
                 nb = _shape_bytes(rtype)
                 ob = 0
-                args = re.match(r".*?=\s*\S+\s+[\w\-]+\(([^)]*)\)", line)
-                if args:
-                    for a in args.group(1).split(","):
-                        a = a.strip().lstrip("%")
-                        if a in shapes:
-                            ob += _shape_bytes(shapes[a])
+                args = _op_args(line)
+                for a in args:
+                    ob += _shape_bytes(_operand_type(a, shapes))
                 if kind == "dynamic-update-slice":
                     # in-place DUS: traffic = update read + update write,
                     # not the whole buffer (XLA aliases the operand)
                     upd = 0
-                    if args:
-                        names = [a.strip().lstrip("%")
-                                 for a in args.group(1).split(",")]
-                        if len(names) >= 2 and names[1] in shapes:
-                            upd = _shape_bytes(shapes[names[1]])
+                    if len(args) >= 2:
+                        upd = _shape_bytes(_operand_type(args[1], shapes))
                     total = 2 * upd if upd else nb
                 elif kind == "dynamic-slice":
                     total = 2 * nb

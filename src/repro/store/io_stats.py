@@ -3,10 +3,16 @@
 The paper's Fig. 16 reports *total* vs *useful* disk traffic; the ratio is
 read amplification. We track both so the same table can be produced from any
 store implementation (bucketed or per-vector).
+
+Thread safety: the prefetching I/O subsystem (``repro.io``) issues bucket
+reads from a worker pool while the executor thread accounts verify-side
+traffic, so all mutation goes through one lock. The lock is uncontended in
+sync mode (single thread) and cheap relative to a page-sized read.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 
 
@@ -26,29 +32,47 @@ class IOStats:
     read_seconds: float = 0.0
     write_seconds: float = 0.0
 
+    def __post_init__(self) -> None:
+        self._lock = threading.Lock()
+
     def record_read(self, useful: int, *, page_aligned: bool = True) -> None:
         total = _page_round(useful) if page_aligned else useful
-        self.read_ops += 1
-        self.bytes_read_total += total
-        self.bytes_read_useful += useful
+        with self._lock:
+            self.read_ops += 1
+            self.bytes_read_total += total
+            self.bytes_read_useful += useful
+
+    def record_reads(self, count: int, bytes_each: int, *,
+                     page_aligned: bool = True) -> None:
+        """Account ``count`` same-sized reads in one locked update (a row
+        gather is one call instead of O(n) ``record_read`` calls)."""
+        if count <= 0:
+            return
+        each = _page_round(bytes_each) if page_aligned else bytes_each
+        with self._lock:
+            self.read_ops += count
+            self.bytes_read_total += count * each
+            self.bytes_read_useful += count * bytes_each
 
     def record_write(self, useful: int, *, page_aligned: bool = True) -> None:
         total = _page_round(useful) if page_aligned else useful
-        self.write_ops += 1
-        self.bytes_written_total += total
-        self.bytes_written_useful += useful
+        with self._lock:
+            self.write_ops += 1
+            self.bytes_written_total += total
+            self.bytes_written_useful += useful
+
+    def add_seconds(self, field: str, dt: float) -> None:
+        with self._lock:
+            setattr(self, field, getattr(self, field) + dt)
 
     @property
     def read_amplification(self) -> float:
-        if self.bytes_read_useful == 0:
-            return 1.0
-        return self.bytes_read_total / self.bytes_read_useful
+        return _amplification(self.bytes_read_total, self.bytes_read_useful)
 
     @property
     def write_amplification(self) -> float:
-        if self.bytes_written_useful == 0:
-            return 1.0
-        return self.bytes_written_total / self.bytes_written_useful
+        return _amplification(self.bytes_written_total,
+                              self.bytes_written_useful)
 
     def merge(self, other: "IOStats") -> "IOStats":
         out = IOStats()
@@ -57,14 +81,19 @@ class IOStats:
         return out
 
     def snapshot(self) -> dict:
-        d = dataclasses.asdict(self)
-        d["read_amplification"] = self.read_amplification
-        d["write_amplification"] = self.write_amplification
+        with self._lock:
+            d = {f.name: getattr(self, f.name)
+                 for f in dataclasses.fields(IOStats)}
+        d["read_amplification"] = _amplification(d["bytes_read_total"],
+                                                 d["bytes_read_useful"])
+        d["write_amplification"] = _amplification(d["bytes_written_total"],
+                                                  d["bytes_written_useful"])
         return d
 
     def reset(self) -> None:
-        for f in dataclasses.fields(IOStats):
-            setattr(self, f.name, type(getattr(self, f.name))())
+        with self._lock:
+            for f in dataclasses.fields(IOStats):
+                setattr(self, f.name, type(getattr(self, f.name))())
 
 
 class _Timer:
@@ -80,7 +109,7 @@ class _Timer:
 
     def __exit__(self, *exc):
         dt = time.perf_counter() - self._t0
-        setattr(self._stats, self._field, getattr(self._stats, self._field) + dt)
+        self._stats.add_seconds(self._field, dt)
         return False
 
 
@@ -90,6 +119,10 @@ def read_timer(stats: IOStats) -> _Timer:
 
 def write_timer(stats: IOStats) -> _Timer:
     return _Timer(stats, "write_seconds")
+
+
+def _amplification(total: int, useful: int) -> float:
+    return total / useful if useful else 1.0
 
 
 def _page_round(nbytes: int) -> int:

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import json
 import os
+import time
 from typing import Iterator, Sequence
 
 import numpy as np
@@ -61,8 +62,7 @@ class FlatVectorStore:
         """Gather of rows; each row is an independent page-granular read."""
         with read_timer(self.stats):
             out = np.array(self._mm[np.asarray(idxs, dtype=np.int64)])
-        for _ in range(len(idxs)):
-            self.stats.record_read(self.row_bytes)
+        self.stats.record_reads(len(idxs), self.row_bytes)
         return out
 
     def read_block(self, start: int, count: int) -> np.ndarray:
@@ -106,13 +106,19 @@ class BucketedVectorStore:
     """
 
     def __init__(self, path: str, stats: IOStats | None = None,
-                 fragment_rows: int | None = None):
+                 fragment_rows: int | None = None,
+                 read_latency_s: float = 0.0):
         """``fragment_rows``: emulate file-system fragmentation (paper
         Fig. 14) — each bucket read is accounted as ⌈size/fragment⌉
-        page-rounded extent reads instead of one sequential read."""
+        page-rounded extent reads instead of one sequential read.
+        ``read_latency_s``: emulate SSD access latency — each bucket read
+        sleeps this long (page-cache memmap reads are RAM-speed in this
+        container; the latency knob restores the paper's I/O-bound regime
+        for the pipeline benchmarks)."""
         self.path = path
         self.stats = stats if stats is not None else IOStats()
         self.fragment_rows = fragment_rows
+        self.read_latency_s = read_latency_s
         with open(path + ".meta") as f:
             meta = json.load(f)
         self.dim = int(meta["dim"])
@@ -141,22 +147,46 @@ class BucketedVectorStore:
     # -- reads --------------------------------------------------------------
     def read_bucket(self, b: int) -> tuple[np.ndarray, np.ndarray]:
         """One sequential read of bucket b → (vectors, original ids)."""
+        size = int(self.bucket_sizes[b])
+        vecs = np.empty((size, self.dim), self.dtype)
+        ids = np.empty(size, np.int64)
+        self.read_bucket_into(b, vecs, ids)
+        return vecs, ids
+
+    def read_bucket_into(self, b: int, out_vecs: np.ndarray,
+                         out_ids: np.ndarray,
+                         pad_value: float = 0.0) -> int:
+        """Read bucket ``b`` directly into preallocated slabs (no per-read
+        allocation — the hot path of the prefetching I/O subsystem).
+
+        ``out_vecs``: (capacity, dim) float32, ``out_ids``: (capacity,)
+        int64 with capacity >= bucket size; rows past the bucket are filled
+        with ``pad_value`` / -1. Returns the bucket's row count.
+        ``read_bucket`` delegates here, so sync and prefetch reads share
+        one accounting path.
+
+        One page-aligned sequential read per bucket (vectors dominate; the
+        id sidecar is read alongside and accounted at byte granularity) —
+        under emulated fragmentation, one read per extent instead.
+        """
         off = int(self.bucket_offsets[b])
         size = int(self.bucket_sizes[b])
         with read_timer(self.stats):
-            vecs = np.array(self._mm[off:off + size])
-            ids = np.array(self._ids[off:off + size])
-        # one page-aligned sequential read per bucket (vectors dominate; the
-        # id sidecar is read alongside and accounted at byte granularity) —
-        # under emulated fragmentation, one read per extent instead
-        if self.fragment_rows:
-            for start in range(0, size, self.fragment_rows):
-                rows = min(self.fragment_rows, size - start)
-                self.stats.record_read(rows * self.row_bytes)
+            if self.read_latency_s:
+                time.sleep(self.read_latency_s)
+            out_vecs[:size] = self._mm[off:off + size]
+            out_ids[:size] = self._ids[off:off + size]
+        out_vecs[size:] = pad_value
+        out_ids[size:] = -1
+        if self.fragment_rows and size:
+            extents = -(-size // self.fragment_rows)
+            full, last = extents - 1, size - (extents - 1) * self.fragment_rows
+            self.stats.record_reads(full, self.fragment_rows * self.row_bytes)
+            self.stats.record_read(last * self.row_bytes)
         else:
             self.stats.record_read(size * self.row_bytes)
         self.stats.record_read(size * 8, page_aligned=False)
-        return vecs, ids
+        return size
 
     def bucket_nbytes(self, b: int) -> int:
         return int(self.bucket_sizes[b]) * self.row_bytes

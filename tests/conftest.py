@@ -7,6 +7,13 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 import pytest
 
+# property tests need hypothesis; skip collection where it isn't installed
+collect_ignore = []
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    collect_ignore.append("test_properties.py")
+
 
 @pytest.fixture(scope="session")
 def clustered_20k():

@@ -1,0 +1,310 @@
+"""repro.io subsystem: sync/prefetch result parity, buffer-pool pin/unpin
+invariants, prefetcher ordering + backpressure, thread-safe IOStats."""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+
+def _pair_keys(pairs):
+    return set(map(tuple, np.asarray(pairs).tolist()))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end parity: the prefetch pipeline must change WHEN reads happen,
+# never WHICH pairs come out
+# ---------------------------------------------------------------------------
+class TestParity:
+    @pytest.mark.parametrize("lookahead,pool", [(4, None), (16, None),
+                                                (32, 6)])
+    def test_self_join_identical_pairs(self, small_dataset, tmp_store,
+                                       lookahead, pool):
+        from repro.core import JoinConfig
+        from repro.core.join import similarity_self_join
+
+        x, eps = small_dataset
+        cfg = JoinConfig(epsilon=eps, pad_align=64, num_buckets=24,
+                         memory_budget_bytes=1 << 20,
+                         io_lookahead=lookahead, io_pool_slabs=pool)
+        r_sync = similarity_self_join(tmp_store(x), cfg, io_mode="sync")
+        r_pre = similarity_self_join(tmp_store(x[:, :]), cfg,
+                                     io_mode="prefetch")
+        assert _pair_keys(r_sync.pairs) == _pair_keys(r_pre.pairs)
+        assert r_pre.bucket_loads == r_sync.bucket_loads  # same schedule
+        pipe = r_pre.io_stats["pipeline"]
+        assert pipe["loads"] == r_pre.bucket_loads
+        assert pipe["max_queue_depth"] >= 1
+
+    def test_cross_join_identical_pairs(self, tmp_path):
+        from repro.core import JoinConfig
+        from repro.core.join import similarity_cross_join
+        from repro.data import clustered_vectors
+        from repro.store.vector_store import FlatVectorStore
+
+        rng = np.random.default_rng(3)
+        x = clustered_vectors(2500, 32, seed=5)
+        y = (x[:1500] + rng.normal(scale=0.05, size=(1500, 32))
+             ).astype(np.float32)
+
+        def mk(a, name):
+            return FlatVectorStore.from_array(str(tmp_path / name), a)
+
+        cfg = JoinConfig(epsilon=0.3, pad_align=64, num_buckets=16,
+                         memory_budget_bytes=1 << 20, io_lookahead=4)
+        r_sync = similarity_cross_join(mk(x, "x1"), mk(y, "y1"), cfg,
+                                       io_mode="sync")
+        r_pre = similarity_cross_join(mk(x, "x2"), mk(y, "y2"), cfg,
+                                      io_mode="prefetch")
+        assert r_sync.pairs.shape[0] > 0  # nontrivial workload
+        assert _pair_keys(r_sync.pairs) == _pair_keys(r_pre.pairs)
+        assert "pipeline" in r_pre.io_stats
+
+    def test_config_io_mode_knob(self, small_dataset, tmp_store):
+        """io_mode can come from JoinConfig itself (no override arg)."""
+        from repro.core import JoinConfig
+        from repro.core.join import similarity_self_join
+
+        x, eps = small_dataset
+        base = dict(epsilon=eps, pad_align=64, num_buckets=16,
+                    memory_budget_bytes=1 << 20)
+        r_sync = similarity_self_join(
+            tmp_store(x), JoinConfig(io_mode="sync", **base))
+        r_pre = similarity_self_join(
+            tmp_store(x[:, :]), JoinConfig(io_mode="prefetch", **base))
+        assert _pair_keys(r_sync.pairs) == _pair_keys(r_pre.pairs)
+
+    def test_attribute_mask_prefetch_parity(self, small_dataset, tmp_store):
+        """Prefetch id slabs are capacity-padded; the attribute bitmap must
+        index only live rows (regression: broadcast error on first flush)."""
+        from repro.core import JoinConfig
+        from repro.core.join import similarity_self_join
+
+        x, eps = small_dataset
+        mask = np.arange(x.shape[0]) % 3 != 0
+        cfg = JoinConfig(epsilon=eps, pad_align=64, num_buckets=16,
+                         memory_budget_bytes=1 << 20)
+        r_sync = similarity_self_join(tmp_store(x), cfg,
+                                      attribute_mask=mask, io_mode="sync")
+        r_pre = similarity_self_join(tmp_store(x[:, :]), cfg,
+                                     attribute_mask=mask,
+                                     io_mode="prefetch")
+        assert r_sync.pairs.shape[0] > 0
+        assert mask[r_pre.pairs].all()  # no filtered id slips through
+        assert _pair_keys(r_sync.pairs) == _pair_keys(r_pre.pairs)
+
+    def test_invalid_io_mode_rejected(self):
+        from repro.core import JoinConfig
+        with pytest.raises(ValueError, match="io_mode"):
+            JoinConfig(epsilon=0.1, io_mode="mmap")
+
+
+# ---------------------------------------------------------------------------
+# buffer pool invariants
+# ---------------------------------------------------------------------------
+class TestBufferPool:
+    def test_pin_unpin_refcounting(self):
+        from repro.io import BufferPool
+
+        pool = BufferPool(2, capacity_rows=8, dim=4)
+        s = pool.acquire()
+        assert pool.refcount(s) == 1
+        pool.pin(s)
+        assert pool.refcount(s) == 2
+        pool.unpin(s)          # still held by the residency pin
+        assert pool.in_use == 1
+        pool.unpin(s)          # now free
+        assert pool.in_use == 0
+
+    def test_pin_on_free_slab_raises(self):
+        from repro.io import BufferPool
+
+        pool = BufferPool(1, capacity_rows=8, dim=4)
+        s = pool.acquire()
+        pool.unpin(s)
+        with pytest.raises(RuntimeError, match="pin on free"):
+            pool.pin(s)
+        with pytest.raises(RuntimeError, match="under-run"):
+            pool.unpin(s)
+
+    def test_pinned_slab_not_reused_until_released(self):
+        """Eviction (one unpin) must not recycle a slab a pending verify
+        batch still pins — the core safety property under eviction."""
+        from repro.io import BufferPool
+
+        pool = BufferPool(1, capacity_rows=4, dim=2)
+        s = pool.acquire()
+        pool.pin(s)              # verify-batch reference
+        pool.vecs(s)[:] = 7.0
+        pool.unpin(s)            # "evict": drop the residency pin
+
+        got = []
+
+        def taker():
+            got.append(pool.acquire(timeout=5))
+
+        t = threading.Thread(target=taker)
+        t.start()
+        t.join(timeout=0.2)
+        assert t.is_alive(), "slab was recycled while still pinned"
+        assert float(pool.vecs(s)[0, 0]) == 7.0
+        pool.unpin(s)            # flush: drop the batch pin
+        t.join(timeout=5)
+        assert got == [s]
+
+    def test_acquire_blocks_until_free(self):
+        from repro.io import BufferPool
+
+        pool = BufferPool(1, capacity_rows=4, dim=2)
+        s = pool.acquire()
+        with pytest.raises(TimeoutError):
+            pool.acquire(timeout=0.05)
+        pool.unpin(s)
+        assert pool.acquire(timeout=1) == s
+        assert pool.blocked_acquires >= 1
+
+
+# ---------------------------------------------------------------------------
+# prefetcher: ordering, lookahead bound, backpressure
+# ---------------------------------------------------------------------------
+def _bucketed_store(tmp_path, num_buckets=12, rows=40, dim=8, seed=0):
+    from repro.store.vector_store import BucketedVectorStore
+
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(1, rows, size=num_buckets)
+    centers = rng.normal(size=(num_buckets, dim)).astype(np.float32)
+    radii = np.ones(num_buckets, np.float32)
+    w = BucketedVectorStore.create(str(tmp_path / "bk"), dim, np.float32,
+                                   sizes, centers, radii)
+    vid = 0
+    for b, n in enumerate(sizes):
+        for _ in range(int(n)):
+            w.append(b, rng.normal(size=dim).astype(np.float32), vid)
+            vid += 1
+    return w.finalize(), sizes
+
+
+class TestPrefetcher:
+    def test_delivers_schedule_order_with_content(self, tmp_path):
+        from repro.io import BufferPool, SchedulePrefetcher
+
+        store, sizes = _bucketed_store(tmp_path)
+        cap = int(sizes.max())
+        # miss-only schedule visiting every bucket twice, interleaved hits
+        order = list(range(12)) + list(range(11, -1, -1))
+        actions = [(b, False, None) for b in order]
+        pool = BufferPool(4, cap, store.dim)
+        pf = SchedulePrefetcher(store, actions, pool, lookahead=3,
+                                num_threads=3)
+        try:
+            for b in order:
+                bucket, slot, n = pf.pop_next()
+                assert bucket == b
+                assert n == int(sizes[b])
+                ref_vecs, ref_ids = store.read_bucket(b)
+                np.testing.assert_array_equal(pool.vecs(slot)[:n], ref_vecs)
+                np.testing.assert_array_equal(pool.ids(slot)[:n], ref_ids)
+                pool.unpin(slot)
+        finally:
+            pf.close()
+
+    def test_backpressure_lookahead_exceeds_pool(self, tmp_path):
+        """lookahead >> pool: the issue thread must block on the pool (not
+        crash, not drop loads) and drain correctly as slabs free up."""
+        from repro.io import BufferPool, SchedulePrefetcher
+
+        store, sizes = _bucketed_store(tmp_path)
+        cap = int(sizes.max())
+        order = list(range(12)) * 3
+        actions = [(b, False, None) for b in order]
+        pool = BufferPool(2, cap, store.dim)   # tiny pool
+        pf = SchedulePrefetcher(store, actions, pool, lookahead=64,
+                                num_threads=2)
+        try:
+            import time
+            time.sleep(0.05)  # let the issue thread hit the pool limit
+            assert pool.in_use <= 2
+            for b in order:
+                bucket, slot, n = pf.pop_next()
+                assert bucket == b
+                pool.unpin(slot)
+            assert pool.blocked_acquires > 0  # backpressure engaged
+        finally:
+            pf.close()
+
+    def test_lookahead_bounds_queue_depth(self, tmp_path):
+        from repro.io import BufferPool, PipelineStats, SchedulePrefetcher
+
+        store, sizes = _bucketed_store(tmp_path)
+        cap = int(sizes.max())
+        order = list(range(12)) * 2
+        actions = [(b, False, None) for b in order]
+        stats = PipelineStats()
+        pool = BufferPool(32, cap, store.dim)  # pool never the limit
+        pf = SchedulePrefetcher(store, actions, pool, lookahead=3,
+                                num_threads=2, stats=stats)
+        try:
+            for _ in order:
+                _, slot, _ = pf.pop_next()
+                pool.unpin(slot)
+        finally:
+            pf.close()
+        assert 1 <= stats.max_queue_depth <= 3
+
+
+# ---------------------------------------------------------------------------
+# IOStats thread safety + batched accounting
+# ---------------------------------------------------------------------------
+class TestIOStats:
+    def test_record_reads_batched_equivalence(self):
+        from repro.store.io_stats import IOStats
+
+        a, b = IOStats(), IOStats()
+        for _ in range(100):
+            a.record_read(100)
+        b.record_reads(100, 100)
+        assert a.snapshot() == b.snapshot()
+
+    def test_concurrent_accounting_is_exact(self):
+        from repro.store.io_stats import IOStats
+
+        stats = IOStats()
+
+        def worker():
+            for _ in range(2000):
+                stats.record_read(10)
+
+        threads = [threading.Thread(target=worker) for _ in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert stats.read_ops == 16000
+        assert stats.bytes_read_useful == 160000
+
+    def test_read_rows_uses_batched_accounting(self, tmp_path):
+        from repro.store.vector_store import FlatVectorStore
+
+        x = np.arange(200, dtype=np.float32).reshape(50, 4)
+        store = FlatVectorStore.from_array(str(tmp_path / "f.bin"), x)
+        before = store.stats.read_ops
+        out = store.read_rows([1, 7, 3])
+        np.testing.assert_array_equal(out, x[[1, 7, 3]])
+        assert store.stats.read_ops - before == 3  # one op per row, batched
+
+
+def test_read_bucket_into_matches_read_bucket(tmp_path):
+    from repro.store.vector_store import BucketedVectorStore  # noqa: F401
+
+    store, sizes = _bucketed_store(tmp_path)
+    cap = int(sizes.max()) + 5
+    vecs = np.empty((cap, store.dim), np.float32)
+    ids = np.empty(cap, np.int64)
+    for b in range(len(sizes)):
+        n = store.read_bucket_into(b, vecs, ids, pad_value=1e15)
+        rv, ri = store.read_bucket(b)
+        assert n == rv.shape[0]
+        np.testing.assert_array_equal(vecs[:n], rv)
+        np.testing.assert_array_equal(ids[:n], ri)
+        assert (vecs[n:] == 1e15).all()
+        assert (ids[n:] == -1).all()

@@ -113,4 +113,5 @@ def test_dryrun_single_cell_on_one_device():
         lowered, info = lower_cell(bundle, shape, mesh)
         compiled = lowered.compile()
     assert info["kind"] == "train_step"
-    assert compiled.cost_analysis()["flops"] > 0
+    from repro.launch.hlo_analysis import summarize_cost
+    assert summarize_cost(compiled.cost_analysis())["flops"] > 0
