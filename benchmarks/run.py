@@ -13,7 +13,7 @@ from benchmarks import (fig7_baselines, fig8_recall, fig9_memory,
                         fig10_threshold, fig11_buckets, fig12_breakdown,
                         fig13_crossjoin, fig14_fragmentation, fig15_io,
                         fig17_ablation, fig18_pruning, fig19_pipeline,
-                        kernel_roofline, randomness)
+                        fig20_striping, kernel_roofline, randomness)
 
 MODULES = [
     ("fig7_baselines", fig7_baselines),
@@ -28,6 +28,7 @@ MODULES = [
     ("fig17_ablation", fig17_ablation),
     ("fig18_pruning", fig18_pruning),
     ("fig19_pipeline", fig19_pipeline),
+    ("fig20_striping", fig20_striping),
     ("randomness", randomness),
     ("kernel_roofline", kernel_roofline),
 ]

@@ -15,13 +15,14 @@ from repro.core.join import similarity_cross_join, similarity_self_join
 from repro.core.ordering import edge_schedule, gorder, window_size
 from repro.core.pruning import cap_constant, miss_bound_terms, prune_candidates
 from repro.core.types import (BucketGraph, BucketMeta, JoinConfig, JoinResult,
-                              canonicalize_pairs, recall)
+                              canonicalize_pairs, dedup_pairs, recall)
 
 __all__ = [
     "BucketGraph", "BucketMeta", "CacheSchedule", "JoinConfig",
     "JoinExecutor", "JoinResult", "bucketize", "build_bucket_graph",
     "candidate_pair_count", "canonicalize_pairs", "cap_constant",
-    "edge_schedule", "gorder", "miss_bound_terms", "prune_candidates",
-    "recall", "similarity_cross_join", "similarity_self_join",
-    "simulate_belady", "simulate_policy", "window_size",
+    "dedup_pairs", "edge_schedule", "gorder", "miss_bound_terms",
+    "prune_candidates", "recall", "similarity_cross_join",
+    "similarity_self_join", "simulate_belady", "simulate_policy",
+    "window_size",
 ]

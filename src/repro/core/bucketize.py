@@ -22,6 +22,8 @@ import numpy as np
 from repro.core.center_index import make_center_index
 from repro.core.types import BucketMeta, JoinConfig
 from repro.kernels import ops as kops
+from repro.store.striped_store import (COALESCE_STRIPE_CHUNK,
+                                       StripedBucketedVectorStore)
 from repro.store.vector_store import BucketedVectorStore, FlatVectorStore
 
 
@@ -91,11 +93,26 @@ def split_oversized(assignment: np.ndarray, centers: np.ndarray,
 def write_buckets(store: FlatVectorStore, out_path: str,
                   assignment: np.ndarray, sizes: np.ndarray,
                   centers: np.ndarray, radii: np.ndarray,
-                  block_rows: int) -> BucketedVectorStore:
-    """Scan 3: stream X, append to per-bucket buffered extents."""
-    writer = BucketedVectorStore.create(
-        out_path, store.dim, np.float32, sizes, centers, radii,
-        stats=store.stats)
+                  block_rows: int, layout_order: np.ndarray | None = None,
+                  num_devices: int = 1, stripe_by: str = "phase",
+                  stripe_chunk: int = 1):
+    """Scan 3: stream X, append to per-bucket buffered extents.
+
+    ``layout_order`` places bucket extents in Gorder/schedule order so
+    schedule-adjacent buckets are disk-adjacent (read coalescing);
+    ``num_devices > 1`` stripes the extents over that many backing files
+    (``StripedBucketedVectorStore``).
+    """
+    if num_devices > 1:
+        writer = StripedBucketedVectorStore.create(
+            out_path, store.dim, np.float32, sizes, centers, radii,
+            num_devices=num_devices, stats=store.stats,
+            layout_order=layout_order, stripe_by=stripe_by,
+            stripe_chunk=stripe_chunk)
+    else:
+        writer = BucketedVectorStore.create(
+            out_path, store.dim, np.float32, sizes, centers, radii,
+            stats=store.stats, layout_order=layout_order)
     for start, block in store.iter_blocks(block_rows):
         blk_assign = assignment[start:start + block.shape[0]]
         # group within the block to batch appends per bucket
@@ -112,9 +129,19 @@ def write_buckets(store: FlatVectorStore, out_path: str,
     return writer.finalize()
 
 
-def bucketize(store: FlatVectorStore, out_path: str, config: JoinConfig
-              ) -> tuple[BucketedVectorStore, BucketMeta, dict]:
-    """Full 3-scan bucketization → (bucketed store, metadata, timings)."""
+def bucketize(store: FlatVectorStore, out_path: str, config: JoinConfig,
+              layout_order_fn=None
+              ) -> tuple["BucketedVectorStore | StripedBucketedVectorStore",
+                         BucketMeta, dict]:
+    """Full 3-scan bucketization → (bucketed store, metadata, timings).
+
+    ``layout_order_fn(meta) -> np.ndarray | None``: called once the final
+    bucket metadata is known, *before* the write scan — returns the disk
+    layout order (typically the join's Gorder node order, see
+    ``ordering.compute_node_order``) so the writer can make
+    schedule-adjacent buckets disk-adjacent. Striping (``config.io_devices
+    > 1``) applies whether or not a layout order is supplied.
+    """
     timings: dict[str, float] = {}
     n_buckets = config.resolve_num_buckets(store.num_vectors)
 
@@ -151,11 +178,26 @@ def bucketize(store: FlatVectorStore, out_path: str, config: JoinConfig
         centers, sizes, radii = (centers[nonempty], sizes[nonempty],
                                  radii[nonempty])
 
+    meta = BucketMeta(centers=centers, radii=radii, sizes=sizes)
+
+    layout_order = None
+    if layout_order_fn is not None:
+        t0 = time.perf_counter()
+        layout_order = layout_order_fn(meta)
+        timings["layout_plan"] = time.perf_counter() - t0
+
     t0 = time.perf_counter()
+    # under coalescing, chunked phase striping keeps schedule-adjacent
+    # buckets on one device (coalescible) while chunks rotate devices;
+    # without it, chunk 1 maximizes per-miss device fan-out
+    stripe_chunk = (COALESCE_STRIPE_CHUNK if config.io_coalesce else 1)
     bstore = write_buckets(store, out_path, assignment, sizes, centers,
-                           radii, config.block_rows)
+                           radii, config.block_rows,
+                           layout_order=layout_order,
+                           num_devices=config.io_devices,
+                           stripe_by=config.io_stripe_by,
+                           stripe_chunk=stripe_chunk)
     timings["write"] = time.perf_counter() - t0
     bstore.read_latency_s = config.emulate_read_latency_s
 
-    meta = BucketMeta(centers=centers, radii=radii, sizes=sizes)
     return bstore, meta, timings

@@ -24,10 +24,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import cache as cache_mod
 from repro.core import ordering
-from repro.core.executor import PAD_COORD, _round_up
-from repro.core.types import BucketGraph, BucketMeta, JoinConfig
+from repro.core.executor import PAD_COORD
+from repro.core.types import (BucketGraph, BucketMeta, JoinConfig,
+                              dedup_pairs, resolve_bucket_capacity,
+                              resolve_cache_buckets, round_up as _round_up)
 from repro.kernels import ref
 
 
@@ -53,18 +54,18 @@ class Superstep:
 
 
 def plan_supersteps(graph: BucketGraph, config: JoinConfig,
-                    cache_buckets: int) -> list[Superstep]:
+                    cache_buckets: int,
+                    meta: BucketMeta) -> list[Superstep]:
     """Gorder → windows of ≤cache_buckets buckets covering all edges.
 
     Each edge lands in the first window containing both endpoints; the
     window advances greedily along the node order (self-pairs implicit —
-    every bucket appears in ≥1 window).
+    every bucket appears in ≥1 window). The order comes from
+    ``ordering.compute_node_order`` (shared with the single-box executor,
+    incl. the spatial strategy).
     """
-    if not config.reorder:
-        node_order = np.arange(graph.num_nodes, dtype=np.int64)
-    else:
-        w = ordering.window_size(cache_buckets, graph)
-        node_order = ordering.gorder(graph, w)
+    node_order = ordering.compute_node_order(graph, meta, config,
+                                             cache_buckets)
     tasks, _, _ = ordering.edge_schedule(graph, node_order)
 
     steps: list[Superstep] = []
@@ -119,12 +120,9 @@ class DistributedJoin:
         self.meta = meta
         self.config = config
         self.mesh = mesh
-        max_size = int(meta.sizes.max()) if meta.num_buckets else 1
-        self.cap = config.bucket_capacity or _round_up(max(max_size, 8),
-                                                       config.pad_align)
-        padded_bytes = self.cap * store.dim * 4
-        self.cache_buckets = max(
-            2, int(config.memory_budget_bytes // padded_bytes))
+        self.cap = resolve_bucket_capacity(config, meta.sizes)
+        self.cache_buckets = resolve_cache_buckets(config, self.cap,
+                                                   store.dim)
         self._host_cache: dict[int, np.ndarray] = {}
         self.loads = 0
         self.hits = 0
@@ -156,7 +154,8 @@ class DistributedJoin:
 
     def run(self, graph: BucketGraph):
         eps2 = float(self.config.epsilon) ** 2
-        steps = plan_supersteps(graph, self.config, self.cache_buckets)
+        steps = plan_supersteps(graph, self.config, self.cache_buckets,
+                                meta=self.meta)
         pairs_out, dists_out = [], []
         sharding = None
         if self.mesh is not None:
@@ -164,12 +163,12 @@ class DistributedJoin:
                 self.mesh, jax.sharding.PartitionSpec("data"))
 
         dc = 0
-        for step in steps:
-            entries = [self._fetch(int(b)) for b in step.bucket_ids]
-            slab = jnp.asarray(np.stack([e[0] for e in entries]))
+        for si, step in enumerate(steps):
             edges = step.edges_local
             if edges.shape[0] == 0:
-                continue
+                continue  # defensive: planner always pairs buckets w/ edges
+            entries = [self._fetch(int(b)) for b in step.bucket_ids]
+            slab = jnp.asarray(np.stack([e[0] for e in entries]))
             # pad edge count to shard evenly; padding repeats edge 0 whose
             # results are sliced off
             E = edges.shape[0]
@@ -199,15 +198,19 @@ class DistributedJoin:
                     ida, idb = entries[a][1], entries[b][1]
                     pairs_out.append(
                         np.stack([ida[rows], idb[cols]], axis=1))
-            self._evict_to(set(int(b) for b in step.bucket_ids))
+            # keep-set is the *upcoming* window: evicting on the finished
+            # window's set discards exactly the slabs superstep w+1 reuses
+            # (e.g. buckets loaded in w-1 that skip w and return in w+1),
+            # while keeping the finished window would park dead slabs
+            # above the memory budget
+            if si + 1 < len(steps):
+                keep = set(int(b) for b in steps[si + 1].bucket_ids)
+            else:
+                keep = set(int(b) for b in step.bucket_ids)
+            self._evict_to(keep)
 
         if pairs_out:
-            raw = np.concatenate(pairs_out).astype(np.int64)
-            lo = np.minimum(raw[:, 0], raw[:, 1])
-            hi = np.maximum(raw[:, 0], raw[:, 1])
-            keys = (lo << 32) | hi
-            uniq = np.unique(keys[lo != hi])
-            pairs = np.stack([uniq >> 32, uniq & 0xFFFFFFFF], axis=1)
+            pairs, _ = dedup_pairs(np.concatenate(pairs_out))
         else:
             pairs = np.zeros((0, 2), np.int64)
         return pairs, {"supersteps": len(steps), "host_loads": self.loads,

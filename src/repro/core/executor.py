@@ -31,17 +31,14 @@ import numpy as np
 from repro.core import cache as cache_mod
 from repro.core import ordering
 from repro.core.types import (BucketGraph, BucketMeta, JoinConfig,
-                              JoinResult)
+                              JoinResult, dedup_pairs,
+                              resolve_bucket_capacity, resolve_cache_buckets)
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.store.vector_store import BucketedVectorStore
 
 PAD_COORD = 1e15  # padded rows: astronomically far from everything
 VERIFY_BATCH = 32  # edges per batched kernel dispatch
-
-
-def _round_up(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
 
 
 @functools.partial(jax.jit, static_argnames=("eps2",))
@@ -118,27 +115,24 @@ class JoinExecutor:
         self.meta = meta
         self.config = config
         self.attribute_mask = attribute_mask
-        max_size = int(meta.sizes.max()) if meta.num_buckets else 1
-        cap = config.bucket_capacity or _round_up(max(max_size, 8),
-                                                  config.pad_align)
-        if cap < max_size:
-            raise ValueError(f"bucket_capacity {cap} < max bucket {max_size}")
+        cap = resolve_bucket_capacity(config, meta.sizes)
         self.bucket_capacity = cap
         self.padded_bucket_bytes = cap * store.dim * 4
-        self.cache_buckets = max(
-            2, int(config.memory_budget_bytes // self.padded_bucket_bytes))
+        self.cache_buckets = resolve_cache_buckets(config, cap, store.dim)
 
     # -- orchestration -------------------------------------------------------
-    def plan(self, graph: BucketGraph):
-        """Gorder (optional) → edge order → access seq → cache schedule."""
+    def plan(self, graph: BucketGraph, node_order: np.ndarray | None = None):
+        """Gorder (optional) → edge order → access seq → cache schedule.
+
+        ``node_order`` short-circuits the ordering step when the caller
+        already planned it (e.g. the disk-layout pass in ``bucketize``) —
+        identical by construction since both go through
+        ``ordering.compute_node_order``.
+        """
         t0 = time.perf_counter()
-        if not self.config.reorder:
-            node_order = np.arange(graph.num_nodes, dtype=np.int64)
-        elif self.config.order_strategy == "spatial":
-            node_order = ordering.spatial_order(self.meta.centers)
-        else:
-            w = ordering.window_size(self.cache_buckets, graph)
-            node_order = ordering.gorder(graph, w)
+        if node_order is None:
+            node_order = ordering.compute_node_order(
+                graph, self.meta, self.config, self.cache_buckets)
         tasks, access_seq, pins = ordering.edge_schedule(graph, node_order)
         schedule = cache_mod.simulate_policy(
             access_seq, graph.num_nodes, self.cache_buckets,
@@ -162,11 +156,14 @@ class JoinExecutor:
             self.store, self.bucket_capacity, schedule.actions,
             lookahead=self.config.io_lookahead, pool_slabs=pool_slabs,
             num_threads=self.config.io_threads, pad_value=PAD_COORD,
-            stats=stats)
+            batch_reads=self.config.io_batch_reads,
+            coalesce=self.config.io_coalesce, stats=stats)
         return cache, stats
 
-    def run(self, graph: BucketGraph) -> JoinResult:
-        tasks, access_seq, schedule, plan_seconds = self.plan(graph)
+    def run(self, graph: BucketGraph,
+            node_order: np.ndarray | None = None) -> JoinResult:
+        tasks, access_seq, schedule, plan_seconds = self.plan(graph,
+                                                             node_order)
         cache, pstats = self._make_cache(schedule)
         eps = float(self.config.epsilon)
 
@@ -273,15 +270,8 @@ class JoinExecutor:
         exec_seconds = time.perf_counter() - t0
 
         if pairs_out:
-            raw = np.concatenate(pairs_out)
-            rawd = np.concatenate(dists_out)
-            lo = np.minimum(raw[:, 0], raw[:, 1])
-            hi = np.maximum(raw[:, 0], raw[:, 1])
-            keys = (lo.astype(np.int64) << 32) | hi.astype(np.int64)
-            uniq, first_idx = np.unique(keys, return_index=True)
-            pairs = np.stack([uniq >> 32, uniq & 0xFFFFFFFF], axis=1)
-            keep = pairs[:, 0] != pairs[:, 1]
-            pairs, dists = pairs[keep], rawd[first_idx][keep]
+            pairs, dists = dedup_pairs(np.concatenate(pairs_out),
+                                       np.concatenate(dists_out))
         else:
             pairs = np.zeros((0, 2), np.int64)
             dists = np.zeros(0, np.float32)

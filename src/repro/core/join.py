@@ -17,12 +17,15 @@ import time
 
 import numpy as np
 
+from repro.core import ordering
 from repro.core.bucket_graph import build_bucket_graph
 from repro.core.bucketize import bucketize
 from repro.core.center_index import make_center_index
 from repro.core.executor import JoinExecutor
 from repro.core.pruning import prune_candidates
-from repro.core.types import (BucketGraph, BucketMeta, JoinConfig, JoinResult)
+from repro.core.types import (BucketGraph, BucketMeta, JoinConfig,
+                              JoinResult, resolve_bucket_capacity,
+                              resolve_cache_buckets)
 from repro.store.vector_store import FlatVectorStore
 
 
@@ -44,22 +47,49 @@ def similarity_self_join(store: FlatVectorStore, config: JoinConfig,
     os.makedirs(workdir, exist_ok=True)
     timings: dict[str, float] = {}
 
+    # disk-layout planning: when coalescing or striping is on, the write
+    # scan needs the join's node order *before* it lays out extents — the
+    # planner runs on the final bucket metadata, and its graph/order are
+    # reused below so the schedule matches the layout by construction
+    plan_cache: dict = {}
+
+    def layout_fn(meta: BucketMeta):
+        graph = build_bucket_graph(meta, config)
+        cap = resolve_bucket_capacity(config, meta.sizes)
+        cache_buckets = resolve_cache_buckets(config, cap, store.dim)
+        order = ordering.compute_node_order(graph, meta, config,
+                                            cache_buckets)
+        plan_cache["graph"], plan_cache["order"] = graph, order
+        return order
+
+    wants_layout = config.io_coalesce or config.io_devices > 1
     t0 = time.perf_counter()
     bstore, meta, bt = bucketize(store, os.path.join(workdir, "buckets"),
-                                 config)
+                                 config,
+                                 layout_order_fn=(layout_fn if wants_layout
+                                                  else None))
     timings["bucketing"] = time.perf_counter() - t0
     timings.update({f"bucketing/{k}": v for k, v in bt.items()})
 
     t0 = time.perf_counter()
-    graph = build_bucket_graph(meta, config)
+    graph = plan_cache.get("graph")
+    if graph is None:
+        graph = build_bucket_graph(meta, config)
     timings["graph"] = time.perf_counter() - t0
 
     executor = JoinExecutor(bstore, meta, config,
                             attribute_mask=attribute_mask)
-    result = executor.run(graph)
+    result = executor.run(graph, node_order=plan_cache.get("order"))
     result.timings.update(timings)
+    # the layout pass did the graph build + ordering the executor reuses;
+    # attribute it to orchestration (total and sub-key both) so phase
+    # breakdowns stay comparable with non-layout configs
+    layout_s = result.timings.pop("bucketing/layout_plan", 0.0)
+    if layout_s:
+        result.timings["orchestration/layout_plan"] = layout_s
+    result.timings["bucketing"] -= layout_s
     result.timings["orchestration"] = (result.timings.pop("plan")
-                                       + timings["graph"])
+                                       + timings["graph"] + layout_s)
     return result
 
 
@@ -87,11 +117,18 @@ def similarity_cross_join(store_x: FlatVectorStore, store_y: FlatVectorStore,
 
     cfg_drive = config
     cfg_cache = config
+    # the bipartite schedule isn't known until both sides are bucketized,
+    # so exact schedule-order layout is impossible here; a per-side
+    # spatial tour of centers approximates it (the executor's Gorder over
+    # the bipartite graph follows metric locality), keeping coalescing
+    # and phase striping useful on cross-joins too
+    layout = ((lambda m: ordering.spatial_order(m.centers))
+              if (config.io_coalesce or config.io_devices > 1) else None)
     t0 = time.perf_counter()
     bs_d, meta_d, _ = bucketize(s_drive, os.path.join(workdir, "drive"),
-                                cfg_drive)
+                                cfg_drive, layout_order_fn=layout)
     bs_c, meta_c, _ = bucketize(s_cache, os.path.join(workdir, "cache"),
-                                cfg_cache)
+                                cfg_cache, layout_order_fn=layout)
     bucketing_s = time.perf_counter() - t0
 
     # bipartite candidate graph: for each drive bucket, candidate cache
@@ -161,6 +198,36 @@ class _CombinedBipartiteStore:
         self._offs = (drive_id_offset, cache_id_offset)
         self.stats = drive.stats  # JoinExecutor snapshots this; we override
         self._live = (drive.stats, cache.stats)
+        # device surface: the two sides are distinct backing stores, so
+        # their device ids are disjoint; the prefetcher gets one queue per
+        # underlying device across both
+        self.num_devices = drive.num_devices + cache.num_devices
+
+    def device_of(self, b: int) -> int:
+        if b < self.off:
+            return self.drive.device_of(b)
+        return self.drive.num_devices + self.cache.device_of(b - self.off)
+
+    def contiguous_after(self, a: int, b: int) -> bool:
+        if a < self.off and b < self.off:
+            return self.drive.contiguous_after(a, b)
+        if a >= self.off and b >= self.off:
+            return self.cache.contiguous_after(a - self.off, b - self.off)
+        return False
+
+    def read_run_into(self, buckets, out_vecs, out_ids,
+                      pad_value: float = 0.0) -> list[int]:
+        if buckets[0] < self.off:
+            side, locs, off = (self.drive, list(buckets), self._offs[0])
+        else:
+            side = self.cache
+            locs = [b - self.off for b in buckets]
+            off = self._offs[1]
+        ns = side.read_run_into(locs, out_vecs, out_ids,
+                                pad_value=pad_value)
+        for oi, n in zip(out_ids, ns):
+            oi[:n] += off
+        return ns
 
     def read_bucket(self, b: int):
         if b < self.off:

@@ -129,6 +129,22 @@ def edge_schedule(graph: BucketGraph, node_order: np.ndarray):
         np.asarray(pins, dtype=np.int64)
 
 
+def compute_node_order(graph: BucketGraph, meta, config,
+                       cache_buckets: int) -> np.ndarray:
+    """One node-order policy for every consumer of the schedule.
+
+    The executor's cache schedule, the distributed superstep planner and
+    the bucketed writer's *disk layout* (schedule-adjacent ⇒ disk-adjacent
+    for read coalescing) all derive their order here, so they agree by
+    construction.
+    """
+    if not config.reorder:
+        return np.arange(graph.num_nodes, dtype=np.int64)
+    if config.order_strategy == "spatial":
+        return spatial_order(meta.centers)
+    return gorder(graph, window_size(cache_buckets, graph))
+
+
 def window_size(cache_buckets: int, graph: BucketGraph) -> int:
     """w = C / d_avg (paper §4.3)."""
     if graph.num_edges == 0 or graph.num_nodes == 0:

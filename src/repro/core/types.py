@@ -39,7 +39,20 @@ class JoinConfig:
       io_pool_slabs: slab count of the prefetch buffer pool; None sizes it
         to cache capacity + io_lookahead. Values below cache capacity + 1
         are raised to that floor (pipeline liveness).
-      io_threads: background reader threads for prefetch mode.
+      io_threads: background reader threads for prefetch mode — *per
+        device* when the store is striped (models per-device queue depth).
+      io_devices: number of backing files ("SSDs") the bucketed store is
+        striped over; >1 selects ``StripedBucketedVectorStore`` and gives
+        the prefetcher one submission queue per device.
+      io_stripe_by: "phase" assigns buckets to devices round-robin in disk
+        layout (≈ schedule) order — consecutive misses fan out across all
+        devices; "hash" assigns bucket id mod devices.
+      io_batch_reads: submit adjacent schedule misses that land on the
+        same device as one batched request (io_uring-style submission).
+      io_coalesce: merge batched reads of disk-contiguous buckets into a
+        single sequential read, split into slabs on completion (implies
+        batching; also makes the writer lay buckets out in schedule order
+        so schedule-adjacent ⇒ disk-adjacent).
       emulate_read_latency_s: per-bucket-read sleep applied to the
         bucketed store — restores the paper's SSD-latency-bound regime on
         page-cached memmaps (benchmarks only; 0 disables).
@@ -64,12 +77,21 @@ class JoinConfig:
     io_lookahead: int = 8
     io_pool_slabs: Optional[int] = None
     io_threads: int = 2
+    io_devices: int = 1
+    io_stripe_by: str = "phase"
+    io_batch_reads: bool = False
+    io_coalesce: bool = False
     emulate_read_latency_s: float = 0.0
 
     def __post_init__(self):
         if self.io_mode not in ("sync", "prefetch"):
             raise ValueError(f"io_mode must be 'sync' or 'prefetch', "
                              f"got {self.io_mode!r}")
+        if self.io_devices < 1:
+            raise ValueError(f"io_devices must be >= 1, got {self.io_devices}")
+        if self.io_stripe_by not in ("phase", "hash"):
+            raise ValueError(f"io_stripe_by must be 'phase' or 'hash', "
+                             f"got {self.io_stripe_by!r}")
 
     def resolve_num_buckets(self, num_vectors: int) -> int:
         if self.num_buckets is not None:
@@ -136,6 +158,59 @@ class JoinResult:
     def cache_hit_rate(self) -> float:
         tot = self.cache_hits + self.cache_misses
         return self.cache_hits / tot if tot else 0.0
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def resolve_bucket_capacity(config: JoinConfig, sizes: np.ndarray) -> int:
+    """Padded rows per bucket slab (fixed kernel shape), from the layout
+    plan. One definition shared by the executor, the distributed join and
+    bucketize's disk-layout planner, so they can never disagree."""
+    max_size = int(np.max(sizes)) if len(sizes) else 1
+    cap = config.bucket_capacity or round_up(max(max_size, 8),
+                                             config.pad_align)
+    if cap < max_size:
+        raise ValueError(f"bucket_capacity {cap} < max bucket {max_size}")
+    return cap
+
+
+def resolve_cache_buckets(config: JoinConfig, capacity_rows: int,
+                          dim: int) -> int:
+    """Resident bucket slots under the memory budget (≥ 2 for edge pins)."""
+    padded_bytes = capacity_rows * dim * 4
+    return max(2, int(config.memory_budget_bytes // padded_bytes))
+
+
+def dedup_pairs(raw: np.ndarray, dists: np.ndarray | None = None
+                ) -> tuple[np.ndarray, np.ndarray | None]:
+    """Canonicalize (lo, hi), drop self-pairs, deduplicate — id-range safe.
+
+    The fast path packs each pair as ``(lo << 32) | hi``; large ids
+    (reachable via cross-join id offsetting at billion scale) break the
+    packing — ids ≥ 2^32 collide outright, and ids ≥ 2^31 overflow the
+    int64 sign bit under the shift, so the arithmetic unshift returns
+    negative ids. Both ranges fall back to a lexicographic ``np.unique``
+    over rows. Returns (pairs, dists-at-first-occurrence) with dists None
+    iff not supplied.
+    """
+    if raw.size == 0:
+        return (np.zeros((0, 2), np.int64),
+                np.zeros(0, np.float32) if dists is not None else None)
+    raw = np.asarray(raw, dtype=np.int64)
+    lo = np.minimum(raw[:, 0], raw[:, 1])
+    hi = np.maximum(raw[:, 0], raw[:, 1])
+    if int(lo.min()) >= 0 and int(hi.max()) < (1 << 31):
+        keys = (lo << 32) | hi
+        uniq, first_idx = np.unique(keys, return_index=True)
+        pairs = np.stack([uniq >> 32, uniq & 0xFFFFFFFF], axis=1)
+    else:
+        stacked = np.stack([lo, hi], axis=1)
+        pairs, first_idx = np.unique(stacked, axis=0, return_index=True)
+    keep = pairs[:, 0] != pairs[:, 1]
+    out_d = dists[first_idx][keep] if dists is not None else None
+    return pairs[keep], out_d
 
 
 def canonicalize_pairs(pairs: np.ndarray) -> np.ndarray:

@@ -10,12 +10,16 @@ Pallas verification:
                      batches keep evicted slabs alive via pins).
   ``prefetcher``   — ``SchedulePrefetcher`` walks the precomputed cache
                      schedule ahead of the executor with a bounded
-                     lookahead window, issuing reads on a worker pool with
-                     pool-exhaustion backpressure. ``PrefetchedBucketCache``
-                     is the executor-facing frontend (same surface as the
-                     sync ``BucketCache``).
+                     lookahead window, issuing reads with pool-exhaustion
+                     backpressure on one submission queue *per device*
+                     (striped stores), batching adjacent same-device
+                     misses into single submissions and coalescing
+                     disk-contiguous ones into single sequential reads.
+                     ``PrefetchedBucketCache`` is the executor-facing
+                     frontend (same surface as the sync ``BucketCache``).
   ``pipeline``     — ``PipelineStats``: io_wait/compute split, overlap
-                     efficiency, queue depth; surfaced in
+                     efficiency, queue depth, per-device depth/loads and
+                     batched/coalesced-read counters; surfaced in
                      ``JoinResult.timings`` / ``io_stats["pipeline"]``.
 
 Selected via ``JoinConfig.io_mode`` ("sync" | "prefetch"); result pair

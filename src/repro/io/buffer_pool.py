@@ -62,8 +62,18 @@ class BufferPool:
             return self._refs[slot]
 
     # -- lifecycle -----------------------------------------------------------
+    def _take_free(self) -> int:
+        """Pop a free slab at refcount 1 (caller holds the lock)."""
+        slot = self._free.pop()
+        self._refs[slot] = 1
+        self.max_in_use = max(self.max_in_use,
+                              self.num_slabs - len(self._free))
+        return slot
+
     def acquire(self, timeout: float | None = None) -> int:
-        """Take a free slab (refcount 1). Blocks while the pool is empty."""
+        """Take a free slab (refcount 1). Blocks while the pool is empty.
+
+        ``acquires`` counts attempts (blocking and non-blocking alike)."""
         with self._cond:
             self.acquires += 1
             if not self._free:
@@ -74,11 +84,21 @@ class BufferPool:
                                        f"({self.num_slabs} slabs, all pinned)")
             if self._closed:
                 raise RuntimeError("buffer pool closed")
-            slot = self._free.pop()
-            self._refs[slot] = 1
-            self.max_in_use = max(self.max_in_use,
-                                  self.num_slabs - len(self._free))
-            return slot
+            return self._take_free()
+
+    def try_acquire(self) -> int | None:
+        """Non-blocking acquire: a free slab (refcount 1) or None.
+
+        The batched-submission path uses this for every slab after a
+        group's first — extending a batch must never block while holding
+        already-acquired slabs (liveness), so exhaustion simply caps the
+        batch size instead of waiting.
+        """
+        with self._cond:
+            self.acquires += 1
+            if self._closed or not self._free:
+                return None
+            return self._take_free()
 
     def pin(self, slot: int) -> None:
         """Add a reference; only legal on a live (already-acquired) slab."""

@@ -9,6 +9,11 @@ perfect pipeline has io_wait → 0 with read_s unchanged, so
 (1.0 = all I/O behind compute, 0.0 = fully serial — the sync executor by
 construction). Queue depth and backpressure counters come from the
 prefetcher/pool and size the lookahead/pool knobs.
+
+Multi-device additions (striped stores): per-device load counts and max
+in-flight depth (is every device's queue actually kept full?), plus the
+batched-submission and coalesced-read counters of the io_uring-style
+submission path (how many per-read round trips the batching saved).
 """
 from __future__ import annotations
 
@@ -29,6 +34,13 @@ class PipelineStats:
     max_slabs_in_use: int = 0
     blocked_acquires: int = 0   # pool-exhaustion backpressure events
     lookahead: int = 0
+    num_devices: int = 1        # submission queues (striped store stripes)
+    batched_submissions: int = 0  # submissions carrying > 1 read
+    batched_reads: int = 0        # reads that rode in a batched submission
+    coalesced_reads: int = 0      # merged sequential reads performed
+    coalesced_buckets: int = 0    # buckets served by coalesced reads
+    device_loads: list = dataclasses.field(default_factory=list)
+    device_depth_max: list = dataclasses.field(default_factory=list)
 
     def __post_init__(self) -> None:
         self._lock = threading.Lock()
@@ -41,6 +53,22 @@ class PipelineStats:
         with self._lock:
             self.max_queue_depth = max(self.max_queue_depth, depth)
 
+    # -- per-device telemetry -------------------------------------------------
+    def init_devices(self, num_devices: int) -> None:
+        with self._lock:
+            self.num_devices = int(num_devices)
+            self.device_loads = [0] * self.num_devices
+            self.device_depth_max = [0] * self.num_devices
+
+    def observe_device_depth(self, dev: int, depth: int) -> None:
+        with self._lock:
+            self.device_depth_max[dev] = max(self.device_depth_max[dev],
+                                             depth)
+
+    def count_device_loads(self, dev: int, n: int) -> None:
+        with self._lock:
+            self.device_loads[dev] += n
+
     @property
     def overlap_efficiency(self) -> float:
         if self.read_s <= 0:
@@ -49,8 +77,10 @@ class PipelineStats:
 
     def snapshot(self) -> dict:
         with self._lock:
-            d = {f.name: getattr(self, f.name)
-                 for f in dataclasses.fields(PipelineStats)}
+            d = {}
+            for f in dataclasses.fields(PipelineStats):
+                v = getattr(self, f.name)
+                d[f.name] = list(v) if isinstance(v, list) else v
         d["overlap_efficiency"] = (
             max(0.0, d["read_s"] - d["io_wait_s"]) / d["read_s"]
             if d["read_s"] > 0 else 1.0)

@@ -6,15 +6,31 @@ paper uses for Belady eviction (§4.2). ``SchedulePrefetcher`` therefore
 needs no prediction: an issue thread walks the schedule's miss sequence up
 to ``lookahead`` loads ahead of the executor, takes a slab from the
 ``BufferPool`` (blocking when the pool is exhausted — backpressure), and
-hands the read to a small worker pool. The executor consumes loads in
-schedule order via ``pop_next``; out-of-order *completion* is fine,
-consumption is serialized by load index.
+hands the read to a worker pool. The executor consumes loads in schedule
+order via ``pop_next``; out-of-order *completion* is fine, consumption is
+serialized by load index.
+
+Multi-device stores (``StripedBucketedVectorStore``): the prefetcher keeps
+one submission queue (worker pool of ``num_threads``) *per device*, so
+lookahead saturates every device independently instead of serializing
+through one shared pool — reads for device 1 never queue behind a full
+device-0 queue.
+
+Batched submission (io_uring-style): adjacent schedule misses landing on
+the same device are submitted as ONE request (one task on that device's
+queue). With ``coalesce``, batch members that are also disk-contiguous
+(the bucketed writer lays extents out in schedule order, so
+schedule-adjacent ⇒ disk-adjacent) collapse further into a single
+sequential read, split into slabs on completion — one device round trip
+instead of k.
 
 Liveness: the executor evicts the scheduled victim (releasing its
 residency pin) and flushes its pending verify batch (releasing batch pins)
 *before* blocking on a load that has not been issued yet, so a pool with
 at least (cache capacity + 1) slabs always frees a slab for the load the
-executor is about to wait on.
+executor is about to wait on. Batch extension only ever uses
+``try_acquire`` — the issue thread never blocks while holding slabs beyond
+the group's first.
 """
 from __future__ import annotations
 
@@ -22,10 +38,10 @@ import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 
-import numpy as np
-
 from repro.io.buffer_pool import BufferPool
 from repro.io.pipeline import PipelineStats
+
+MAX_BATCH = 8  # reads per batched submission (io_uring SQ burst analogue)
 
 
 class SchedulePrefetcher:
@@ -34,12 +50,21 @@ class SchedulePrefetcher:
     def __init__(self, store, actions, pool: BufferPool, *,
                  lookahead: int = 8, num_threads: int = 2,
                  stats: PipelineStats | None = None,
-                 pad_value: float = 0.0):
+                 pad_value: float = 0.0,
+                 batch_reads: bool = False, coalesce: bool = False,
+                 max_batch: int = MAX_BATCH):
         self.store = store
         self.pool = pool
         self.lookahead = max(1, int(lookahead))
         self.stats = stats if stats is not None else PipelineStats()
         self.pad_value = pad_value
+        self.coalesce = bool(coalesce)
+        self.batch_reads = bool(batch_reads) or self.coalesce
+        self.max_batch = max(1, int(max_batch))
+        self.num_devices = int(getattr(store, "num_devices", 1))
+        self._device_of = (store.device_of if hasattr(store, "device_of")
+                           else (lambda b: 0))
+        self.stats.init_devices(self.num_devices)
         # the miss sequence: the only accesses that touch the disk
         self._loads = [int(b) for b, is_hit, _ in actions if not is_hit]
         self._results: dict[int, tuple[int, int] | BaseException] = {}
@@ -47,9 +72,14 @@ class SchedulePrefetcher:
         self._consumed = 0
         self._closed = False
         self._cond = threading.Condition()
-        self._workers = ThreadPoolExecutor(
-            max_workers=max(1, int(num_threads)),
-            thread_name_prefix="diskjoin-io")
+        self._dev_inflight = [0] * self.num_devices
+        # one submission queue per device: num_threads models the
+        # device's usable queue depth; a striped store gets D independent
+        # queues so no device idles behind another's backlog
+        self._workers = [
+            ThreadPoolExecutor(max_workers=max(1, int(num_threads)),
+                               thread_name_prefix=f"diskjoin-io-d{d}")
+            for d in range(self.num_devices)]
         self._issuer = threading.Thread(target=self._issue_loop,
                                         name="diskjoin-io-issue", daemon=True)
         self._issuer.start()
@@ -57,7 +87,9 @@ class SchedulePrefetcher:
     # -- producer side -------------------------------------------------------
     def _issue_loop(self) -> None:
         try:
-            for k, b in enumerate(self._loads):
+            loads = self._loads
+            k = 0
+            while k < len(loads):
                 with self._cond:
                     while (k - self._consumed >= self.lookahead
                            and not self._closed):
@@ -65,13 +97,30 @@ class SchedulePrefetcher:
                     if self._closed:
                         return
                 slot = self.pool.acquire()  # backpressure: blocks when full
+                dev = self._device_of(loads[k])
+                group = [(k, loads[k], slot)]
+                if self.batch_reads:
+                    self._extend_group(group, dev)
                 with self._cond:
                     if self._closed:
-                        self.pool.unpin(slot)
+                        for _, _, s in group:
+                            self.pool.unpin(s)
                         return
-                    self._issued = k + 1
+                    self._issued = k + len(group)
                     self.stats.observe_depth(self._issued - self._consumed)
-                self._workers.submit(self._read, k, b, slot)
+                    self._dev_inflight[dev] += len(group)
+                    self.stats.observe_device_depth(dev,
+                                                    self._dev_inflight[dev])
+                if len(group) > 1:
+                    self.stats.add("batched_submissions", 1)
+                    self.stats.add("batched_reads", len(group))
+                # one submission, but each run is its own task: the device
+                # serves batch entries concurrently (its queue depth =
+                # io_threads), it does not serialize them — only
+                # disk-contiguous runs collapse into a single read
+                for run in self._partition_runs(group):
+                    self._workers[dev].submit(self._read_run, dev, run)
+                k += len(group)
         except BaseException as e:  # pool closed mid-acquire, etc.
             with self._cond:
                 if not self._closed:
@@ -79,19 +128,68 @@ class SchedulePrefetcher:
                     self._issued += 1
                     self._cond.notify_all()
 
-    def _read(self, k: int, b: int, slot: int) -> None:
+    def _extend_group(self, group: list, dev: int) -> None:
+        """Batch in the *adjacent* schedule misses that hit ``dev``.
+
+        Stops at the first device change, the lookahead horizon, the batch
+        cap, or pool exhaustion (``try_acquire`` never blocks — see module
+        docstring liveness note)."""
+        loads = self._loads
+        j = group[0][0] + 1
+        while j < len(loads) and len(group) < self.max_batch:
+            if self._device_of(loads[j]) != dev:
+                break
+            with self._cond:
+                if self._closed or j - self._consumed >= self.lookahead:
+                    break
+            slot = self.pool.try_acquire()
+            if slot is None:
+                break
+            group.append((j, loads[j], slot))
+            j += 1
+
+    def _partition_runs(self, group: list) -> list[list]:
+        """Split a batched submission into disk-contiguous runs (coalesced
+        into one sequential read each) and singleton reads."""
+        runs = [[group[0]]]
+        for item in group[1:]:
+            if (self.coalesce
+                    and self.store.contiguous_after(runs[-1][-1][1],
+                                                    item[1])):
+                runs[-1].append(item)
+            else:
+                runs.append([item])
+        return runs
+
+    def _read_run(self, dev: int, run: list) -> None:
         t0 = time.perf_counter()
         try:
-            n = self.store.read_bucket_into(
-                b, self.pool.vecs(slot), self.pool.ids(slot),
-                pad_value=self.pad_value)
-            result: tuple[int, int] | BaseException = (slot, n)
+            if len(run) == 1:
+                k, b, slot = run[0]
+                n = self.store.read_bucket_into(
+                    b, self.pool.vecs(slot), self.pool.ids(slot),
+                    pad_value=self.pad_value)
+                results = [(k, (slot, n))]
+            else:
+                ns = self.store.read_run_into(
+                    [b for _, b, _ in run],
+                    [self.pool.vecs(s) for _, _, s in run],
+                    [self.pool.ids(s) for _, _, s in run],
+                    pad_value=self.pad_value)
+                self.stats.add("coalesced_reads", 1)
+                self.stats.add("coalesced_buckets", len(run))
+                results = [(k, (s, n))
+                           for (k, _, s), n in zip(run, ns)]
         except BaseException as e:
-            self.pool.unpin(slot)
-            result = e
+            for _, _, slot in run:
+                self.pool.unpin(slot)
+            results = [(k, e) for k, _, _ in run]
         self.stats.add("read_s", time.perf_counter() - t0)
+        self.stats.count_device_loads(dev, len(run))
         with self._cond:
-            self._results[k] = result
+            self._dev_inflight[dev] -= len(run)
+            for k, res in results:
+                self._results[k] = res
             self._cond.notify_all()
 
     # -- consumer side -------------------------------------------------------
@@ -129,7 +227,8 @@ class SchedulePrefetcher:
             self._cond.notify_all()
         self.pool.close()
         self._issuer.join(timeout=10)
-        self._workers.shutdown(wait=True)
+        for w in self._workers:
+            w.shutdown(wait=True)
         # release any loads that completed but were never consumed
         with self._cond:
             for res in self._results.values():
@@ -149,6 +248,7 @@ class PrefetchedBucketCache:
     def __init__(self, store, capacity_rows: int, actions, *,
                  lookahead: int = 8, pool_slabs: int | None = None,
                  num_threads: int = 2, pad_value: float = 0.0,
+                 batch_reads: bool = False, coalesce: bool = False,
                  stats: PipelineStats | None = None):
         self.stats = stats if stats is not None else PipelineStats()
         self.capacity_rows = int(capacity_rows)
@@ -160,7 +260,8 @@ class PrefetchedBucketCache:
         self.stats.lookahead = int(lookahead)
         self.prefetcher = SchedulePrefetcher(
             store, actions, self.pool, lookahead=lookahead,
-            num_threads=num_threads, stats=self.stats, pad_value=pad_value)
+            num_threads=num_threads, stats=self.stats, pad_value=pad_value,
+            batch_reads=batch_reads, coalesce=coalesce)
         self._slots: dict[int, tuple[int, int]] = {}  # bucket -> (slot, rows)
         self.loads = 0
 

@@ -4,6 +4,8 @@ Real file-backed storage with byte-level I/O accounting so the paper's
 read-amplification and disk-traffic claims are measurable on any box.
 """
 from repro.store.io_stats import IOStats
+from repro.store.striped_store import StripedBucketedVectorStore
 from repro.store.vector_store import BucketedVectorStore, FlatVectorStore
 
-__all__ = ["IOStats", "BucketedVectorStore", "FlatVectorStore"]
+__all__ = ["IOStats", "BucketedVectorStore", "FlatVectorStore",
+           "StripedBucketedVectorStore"]

@@ -23,6 +23,16 @@ import numpy as np
 from repro.store.io_stats import IOStats, read_timer, write_timer
 
 
+def check_layout_order(order: np.ndarray, num_buckets: int) -> np.ndarray:
+    """Validate a disk-layout permutation (O(B) numpy, no PyObject churn)."""
+    order = np.asarray(order, dtype=np.int64)
+    if (order.shape != (num_buckets,)
+            or not np.array_equal(np.sort(order),
+                                  np.arange(num_buckets, dtype=np.int64))):
+        raise ValueError("layout_order must be a permutation of bucket ids")
+    return order
+
+
 class FlatVectorStore:
     """(N, d) float32/float16 matrix on disk with per-row and block reads."""
 
@@ -139,10 +149,35 @@ class BucketedVectorStore:
     @staticmethod
     def create(path: str, dim: int, dtype, bucket_sizes: np.ndarray,
                centers: np.ndarray, radii: np.ndarray,
-               stats: IOStats | None = None) -> "_BucketedWriter":
+               stats: IOStats | None = None,
+               layout_order: np.ndarray | None = None) -> "_BucketedWriter":
+        """``layout_order``: permutation of bucket ids giving their on-disk
+        extent order (Gorder/schedule order ⇒ schedule-adjacent buckets are
+        disk-adjacent, enabling coalesced sequential reads). None = id
+        order."""
         return _BucketedWriter(path, dim, np.dtype(dtype), bucket_sizes,
                                centers, radii,
-                               stats if stats is not None else IOStats())
+                               stats if stats is not None else IOStats(),
+                               layout_order=layout_order)
+
+    # -- device surface (uniform with StripedBucketedVectorStore) -----------
+    num_devices = 1
+
+    def device_of(self, b: int) -> int:
+        return 0
+
+    def contiguous_after(self, a: int, b: int) -> bool:
+        """True iff bucket ``b``'s extent starts where ``a``'s ends.
+
+        Under emulated file-system fragmentation nothing is guaranteed
+        contiguous, so coalescing is disabled — ``read_run_into`` would
+        otherwise charge one sequential read for extents the fragmented
+        file cannot physically serve that way.
+        """
+        if self.fragment_rows:
+            return False
+        return (int(self.bucket_offsets[b])
+                == int(self.bucket_offsets[a]) + int(self.bucket_sizes[a]))
 
     # -- reads --------------------------------------------------------------
     def read_bucket(self, b: int) -> tuple[np.ndarray, np.ndarray]:
@@ -188,6 +223,33 @@ class BucketedVectorStore:
         self.stats.record_read(size * 8, page_aligned=False)
         return size
 
+    def read_run_into(self, buckets, out_vecs, out_ids,
+                      pad_value: float = 0.0) -> list[int]:
+        """Coalesced read: a disk-contiguous run of buckets fetched as ONE
+        sequential read, split into per-bucket slabs on completion.
+
+        ``buckets`` must satisfy ``contiguous_after`` pairwise (the
+        prefetcher's coalescer guarantees this); the whole run is accounted
+        as a single read op and charged one emulated-latency access.
+        """
+        for a, b in zip(buckets, buckets[1:]):
+            if not self.contiguous_after(a, b):
+                raise ValueError(f"buckets {a},{b} are not disk-contiguous")
+        sizes = [int(self.bucket_sizes[b]) for b in buckets]
+        with read_timer(self.stats):
+            if self.read_latency_s:
+                time.sleep(self.read_latency_s)
+            for b, n, ov, oi in zip(buckets, sizes, out_vecs, out_ids):
+                off = int(self.bucket_offsets[b])
+                ov[:n] = self._mm[off:off + n]
+                oi[:n] = self._ids[off:off + n]
+                ov[n:] = pad_value
+                oi[n:] = -1
+        total = sum(sizes)
+        self.stats.record_read(total * self.row_bytes)
+        self.stats.record_read(total * 8, page_aligned=False)
+        return sizes
+
     def bucket_nbytes(self, b: int) -> int:
         return int(self.bucket_sizes[b]) * self.row_bytes
 
@@ -210,14 +272,22 @@ class _BucketedWriter:
     """
 
     def __init__(self, path, dim, dtype, bucket_sizes, centers, radii, stats,
-                 buffer_rows_per_bucket: int = 64):
+                 buffer_rows_per_bucket: int = 64,
+                 layout_order: np.ndarray | None = None):
         self.path = path
         self.dim = dim
         self.dtype = dtype
         self.stats = stats
         self.bucket_sizes = np.asarray(bucket_sizes, dtype=np.int64)
-        self.bucket_offsets = np.concatenate(
-            [[0], np.cumsum(self.bucket_sizes)[:-1]])
+        if layout_order is None:
+            self.bucket_offsets = np.concatenate(
+                [[0], np.cumsum(self.bucket_sizes)[:-1]])
+        else:
+            order = check_layout_order(layout_order, len(self.bucket_sizes))
+            ordered = self.bucket_sizes[order]
+            csum = np.concatenate([[0], np.cumsum(ordered)[:-1]])
+            self.bucket_offsets = np.empty_like(self.bucket_sizes)
+            self.bucket_offsets[order] = csum
         self.num_vectors = int(self.bucket_sizes.sum())
         self._mm = np.memmap(path, dtype=dtype, mode="w+",
                              shape=(self.num_vectors, dim))
@@ -236,6 +306,14 @@ class _BucketedWriter:
         }
 
     def append(self, bucket: int, vec: np.ndarray, vec_id: int) -> None:
+        planned = int(self.bucket_sizes[bucket])
+        appended = int(self._fill[bucket]) + len(self._buf_vecs.get(bucket, ()))
+        if appended >= planned:
+            # without this check the flush would silently write past the
+            # bucket's reserved extent into its neighbor's rows
+            raise ValueError(
+                f"bucket {bucket} overflow: layout reserved {planned} rows, "
+                f"append #{appended + 1} (vec id {vec_id}) exceeds the extent")
         self._buf_vecs.setdefault(bucket, []).append(np.asarray(vec, self.dtype))
         self._buf_ids.setdefault(bucket, []).append(int(vec_id))
         if len(self._buf_vecs[bucket]) >= self._buf_cap:
@@ -252,6 +330,11 @@ class _BucketedWriter:
         if not vecs:
             return
         arr = np.stack(vecs)
+        if int(self._fill[b]) + len(vecs) > int(self.bucket_sizes[b]):
+            raise ValueError(
+                f"bucket {b} overflow: flushing {len(vecs)} rows at fill "
+                f"{int(self._fill[b])} would overrun the reserved extent of "
+                f"{int(self.bucket_sizes[b])} rows")
         start = int(self.bucket_offsets[b] + self._fill[b])
         with write_timer(self.stats):
             self._mm[start:start + len(vecs)] = arr
@@ -263,8 +346,12 @@ class _BucketedWriter:
         for b in list(self._buf_vecs.keys()):
             self._flush_bucket(b)
         if not np.array_equal(self._fill, self.bucket_sizes):
-            raise ValueError("bucket fill mismatch: layout plan vs appended "
-                             f"({self._fill.sum()} vs {self.bucket_sizes.sum()})")
+            bad = int(np.flatnonzero(self._fill != self.bucket_sizes)[0])
+            raise ValueError(
+                f"bucket fill mismatch: bucket {bad} appended "
+                f"{int(self._fill[bad])} rows vs {int(self.bucket_sizes[bad])}"
+                f" planned (totals {int(self._fill.sum())} vs "
+                f"{int(self.bucket_sizes.sum())})")
         self._mm.flush()
         self._ids.flush()
         with open(self.path + ".meta", "w") as f:

@@ -1,0 +1,507 @@
+"""Multi-SSD striped store + batched/coalescing prefetch, and the PR's
+bugfix regressions: writer extent overrun, distributed eviction keep-set,
+pair-key overflow, and the pinned-eviction cache branches."""
+import numpy as np
+import pytest
+
+
+def _pair_keys(pairs):
+    return set(map(tuple, np.asarray(pairs).tolist()))
+
+
+def _filled_writer(writer, sizes, dim, seed=0):
+    rng = np.random.default_rng(seed)
+    vid = 0
+    data = {}
+    for b, n in enumerate(sizes):
+        rows = rng.normal(size=(int(n), dim)).astype(np.float32)
+        data[b] = (rows, np.arange(vid, vid + int(n)))
+        for i in range(int(n)):
+            writer.append(b, rows[i], vid)
+            vid += 1
+    return data
+
+
+# ---------------------------------------------------------------------------
+# writer extent bounds (regression: silent overrun into the neighbor bucket)
+# ---------------------------------------------------------------------------
+class TestWriterBounds:
+    def test_append_past_extent_raises_at_offending_append(self, tmp_path):
+        from repro.store.vector_store import BucketedVectorStore
+
+        sizes = np.array([2, 2])
+        w = BucketedVectorStore.create(
+            str(tmp_path / "bk"), 4, np.float32, sizes,
+            np.zeros((2, 4), np.float32), np.ones(2, np.float32))
+        v = np.zeros(4, np.float32)
+        w.append(0, v, 0)
+        w.append(0, v, 1)
+        with pytest.raises(ValueError, match="bucket 0 overflow"):
+            w.append(0, v, 2)
+        # neighbor bucket untouched: finishing bucket 1 still works
+        w.append(1, v, 3)
+        w.append(1, v, 4)
+
+    def test_overrun_caught_even_after_partial_flush(self, tmp_path):
+        """Rows already flushed to disk (tiny buffer) must still count
+        against the extent — the original bug wrote past it silently."""
+        from repro.store.vector_store import _BucketedWriter
+        from repro.store.io_stats import IOStats
+
+        sizes = np.array([3, 2])
+        w = _BucketedWriter(str(tmp_path / "bk"), 4, np.float32, sizes,
+                            np.zeros((2, 4), np.float32),
+                            np.ones(2, np.float32), IOStats(),
+                            buffer_rows_per_bucket=1)  # flush every append
+        v = np.zeros(4, np.float32)
+        for i in range(3):
+            w.append(0, v, i)
+        with pytest.raises(ValueError, match="bucket 0 overflow"):
+            w.append(0, v, 99)
+
+    def test_finalize_mismatch_names_first_offending_bucket(self, tmp_path):
+        from repro.store.vector_store import BucketedVectorStore
+
+        sizes = np.array([1, 3, 2])
+        w = BucketedVectorStore.create(
+            str(tmp_path / "bk"), 4, np.float32, sizes,
+            np.zeros((3, 4), np.float32), np.ones(3, np.float32))
+        v = np.zeros(4, np.float32)
+        w.append(0, v, 0)          # bucket 0 complete
+        w.append(1, v, 1)          # bucket 1 short by 2
+        w.append(2, v, 2)
+        w.append(2, v, 3)          # bucket 2 complete
+        with pytest.raises(ValueError, match="bucket 1 appended 1 rows"):
+            w.finalize()
+
+
+# ---------------------------------------------------------------------------
+# disk layout order + coalesced run reads
+# ---------------------------------------------------------------------------
+class TestLayoutAndRuns:
+    def test_layout_order_roundtrip_and_contiguity(self, tmp_path):
+        from repro.store.vector_store import BucketedVectorStore
+
+        sizes = np.array([3, 1, 4, 2])
+        order = np.array([2, 0, 3, 1])  # disk order ≠ id order
+        w = BucketedVectorStore.create(
+            str(tmp_path / "bk"), 4, np.float32, sizes,
+            np.zeros((4, 4), np.float32), np.ones(4, np.float32),
+            layout_order=order)
+        data = _filled_writer(w, sizes, 4)
+        store = w.finalize()
+        for b in range(4):
+            vecs, ids = store.read_bucket(b)
+            np.testing.assert_array_equal(vecs, data[b][0])
+            np.testing.assert_array_equal(ids, data[b][1])
+        # layout-adjacent buckets are disk-adjacent, id-adjacent are not
+        assert store.contiguous_after(2, 0)
+        assert store.contiguous_after(0, 3)
+        assert store.contiguous_after(3, 1)
+        assert not store.contiguous_after(0, 1)
+
+    def test_bad_layout_order_rejected(self, tmp_path):
+        from repro.store.vector_store import BucketedVectorStore
+
+        with pytest.raises(ValueError, match="permutation"):
+            BucketedVectorStore.create(
+                str(tmp_path / "bk"), 4, np.float32, np.array([1, 1]),
+                np.zeros((2, 4), np.float32), np.ones(2, np.float32),
+                layout_order=np.array([0, 0]))
+
+    def test_read_run_into_is_one_accounted_read(self, tmp_path):
+        from repro.store.vector_store import BucketedVectorStore
+
+        sizes = np.array([3, 2, 4])
+        w = BucketedVectorStore.create(
+            str(tmp_path / "bk"), 4, np.float32, sizes,
+            np.zeros((3, 4), np.float32), np.ones(3, np.float32))
+        data = _filled_writer(w, sizes, 4)
+        store = w.finalize()
+        cap = 6
+        vecs = [np.empty((cap, 4), np.float32) for _ in range(3)]
+        ids = [np.empty(cap, np.int64) for _ in range(3)]
+        ops_before = store.stats.read_ops
+        ns = store.read_run_into([0, 1, 2], vecs, ids, pad_value=7.0)
+        assert ns == [3, 2, 4]
+        # one vector read + one id-sidecar read for the whole 3-bucket run
+        assert store.stats.read_ops - ops_before == 2
+        for b in range(3):
+            np.testing.assert_array_equal(vecs[b][:ns[b]], data[b][0])
+            np.testing.assert_array_equal(ids[b][:ns[b]], data[b][1])
+            assert (vecs[b][ns[b]:] == 7.0).all()
+            assert (ids[b][ns[b]:] == -1).all()
+
+    def test_fragmented_store_never_coalesces(self, tmp_path):
+        """Emulated fragmentation (fig14) guarantees nothing contiguous:
+        contiguous_after must refuse so coalescing can't model a single
+        sequential read the fragmented file couldn't serve."""
+        from repro.store.vector_store import BucketedVectorStore
+
+        sizes = np.array([2, 2])
+        w = BucketedVectorStore.create(
+            str(tmp_path / "bk"), 4, np.float32, sizes,
+            np.zeros((2, 4), np.float32), np.ones(2, np.float32))
+        _filled_writer(w, sizes, 4)
+        store = w.finalize()
+        assert store.contiguous_after(0, 1)
+        store.fragment_rows = 1
+        assert not store.contiguous_after(0, 1)
+
+    def test_read_run_rejects_non_contiguous(self, tmp_path):
+        from repro.store.vector_store import BucketedVectorStore
+
+        sizes = np.array([2, 2, 2])
+        w = BucketedVectorStore.create(
+            str(tmp_path / "bk"), 4, np.float32, sizes,
+            np.zeros((3, 4), np.float32), np.ones(3, np.float32))
+        _filled_writer(w, sizes, 4)
+        store = w.finalize()
+        vecs = [np.empty((2, 4), np.float32) for _ in range(2)]
+        ids = [np.empty(2, np.int64) for _ in range(2)]
+        with pytest.raises(ValueError, match="not disk-contiguous"):
+            store.read_run_into([0, 2], vecs, ids)
+
+
+# ---------------------------------------------------------------------------
+# striped store: placement, roundtrip, device surface
+# ---------------------------------------------------------------------------
+class TestStripedStore:
+    @pytest.mark.parametrize("stripe_by", ["phase", "hash"])
+    def test_roundtrip_matches_plain_store(self, tmp_path, stripe_by):
+        from repro.store.striped_store import StripedBucketedVectorStore
+
+        rng = np.random.default_rng(1)
+        sizes = rng.integers(1, 6, size=10)
+        centers = rng.normal(size=(10, 4)).astype(np.float32)
+        radii = np.ones(10, np.float32)
+        w = StripedBucketedVectorStore.create(
+            str(tmp_path / "st"), 4, np.float32, sizes, centers, radii,
+            num_devices=4, stripe_by=stripe_by)
+        data = _filled_writer(w, sizes, 4)
+        store = w.finalize()
+        assert store.num_devices == 4
+        assert store.num_vectors == int(sizes.sum())
+        for b in range(10):
+            vecs, ids = store.read_bucket(b)
+            np.testing.assert_array_equal(vecs, data[b][0])
+            np.testing.assert_array_equal(ids, data[b][1])
+        devs = [store.device_of(b) for b in range(10)]
+        assert set(devs) == {0, 1, 2, 3}
+        if stripe_by == "phase":  # round-robin in (identity) layout order
+            assert devs == [b % 4 for b in range(10)]
+        balance = store.device_loads_balanced()
+        assert balance.sum() == store.nbytes
+        assert (balance > 0).all()
+        # reopen from disk
+        reopened = StripedBucketedVectorStore(str(tmp_path / "st"))
+        v2, i2 = reopened.read_bucket(3)
+        np.testing.assert_array_equal(v2, data[3][0])
+        reopened.close()
+        store.close()
+
+    def test_same_device_rank_neighbors_are_contiguous(self, tmp_path):
+        from repro.store.striped_store import StripedBucketedVectorStore
+
+        sizes = np.ones(8, np.int64) * 2
+        w = StripedBucketedVectorStore.create(
+            str(tmp_path / "st"), 4, np.float32, sizes,
+            np.zeros((8, 4), np.float32), np.ones(8, np.float32),
+            num_devices=2, stripe_by="phase")
+        _filled_writer(w, sizes, 4)
+        store = w.finalize()
+        # phase striping over identity layout: device 0 holds 0,2,4,6 in
+        # that order — rank neighbors on one device are disk-adjacent
+        assert store.contiguous_after(0, 2)
+        assert store.contiguous_after(2, 4)
+        assert not store.contiguous_after(0, 1)   # different devices
+        ns = store.read_run_into(
+            [0, 2], [np.empty((2, 4), np.float32) for _ in range(2)],
+            [np.empty(2, np.int64) for _ in range(2)])
+        assert ns == [2, 2]
+        with pytest.raises(ValueError, match="spans devices"):
+            store.read_run_into(
+                [0, 1], [np.empty((2, 4), np.float32) for _ in range(2)],
+                [np.empty(2, np.int64) for _ in range(2)])
+
+    def test_chunked_striping_compacts_empty_devices(self, tmp_path):
+        """chunk 4 × 4 devices × 10 buckets would leave device 3 with no
+        buckets — an unmappable empty file. Device ids must compact onto
+        the devices actually used."""
+        from repro.store.striped_store import StripedBucketedVectorStore
+
+        sizes = np.full(10, 2, np.int64)
+        w = StripedBucketedVectorStore.create(
+            str(tmp_path / "st"), 4, np.float32, sizes,
+            np.zeros((10, 4), np.float32), np.ones(10, np.float32),
+            num_devices=4, stripe_by="phase", stripe_chunk=4)
+        data = _filled_writer(w, sizes, 4)
+        store = w.finalize()
+        assert store.num_devices == 3  # ranks 0-3, 4-7, 8-9
+        for b in range(10):
+            vecs, _ = store.read_bucket(b)
+            np.testing.assert_array_equal(vecs, data[b][0])
+
+    def test_striped_writer_rejects_bad_layout_order(self, tmp_path):
+        from repro.store.striped_store import StripedBucketedVectorStore
+
+        with pytest.raises(ValueError, match="permutation"):
+            StripedBucketedVectorStore.create(
+                str(tmp_path / "st"), 4, np.float32, np.array([1, 1]),
+                np.zeros((2, 4), np.float32), np.ones(2, np.float32),
+                num_devices=2, layout_order=np.array([1, 1]))
+
+    def test_striped_writer_overrun_names_global_bucket(self, tmp_path):
+        from repro.store.striped_store import StripedBucketedVectorStore
+
+        w = StripedBucketedVectorStore.create(
+            str(tmp_path / "st"), 4, np.float32, np.array([1, 1, 1]),
+            np.zeros((3, 4), np.float32), np.ones(3, np.float32),
+            num_devices=2)
+        v = np.zeros(4, np.float32)
+        w.append(2, v, 0)
+        with pytest.raises(ValueError, match="striped bucket 2"):
+            w.append(2, v, 1)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end parity: sync vs prefetch × 1 vs 4 stripes, self- and cross-join
+# ---------------------------------------------------------------------------
+class TestStripedParity:
+    @pytest.mark.parametrize("devices,io_mode", [
+        (1, "sync"), (1, "prefetch"), (4, "sync"), (4, "prefetch")])
+    def test_self_join_identical_pairs(self, small_dataset, tmp_store,
+                                       devices, io_mode):
+        from repro.core import JoinConfig
+        from repro.core.join import similarity_self_join
+
+        x, eps = small_dataset
+        base = dict(epsilon=eps, pad_align=64, num_buckets=24,
+                    memory_budget_bytes=1 << 20, io_lookahead=12)
+        r_ref = similarity_self_join(tmp_store(x), JoinConfig(**base),
+                                     io_mode="sync")
+        cfg = JoinConfig(io_devices=devices, io_batch_reads=True,
+                         io_coalesce=True, **base)
+        r = similarity_self_join(tmp_store(x[:, :]), cfg, io_mode=io_mode)
+        assert r_ref.pairs.shape[0] > 0
+        assert _pair_keys(r.pairs) == _pair_keys(r_ref.pairs)
+        if io_mode == "prefetch":
+            p = r.io_stats["pipeline"]
+            assert p["num_devices"] == devices
+            assert len(p["device_loads"]) == devices
+            assert sum(p["device_loads"]) == r.bucket_loads
+            assert all(d >= 1 for d in p["device_depth_max"])
+
+    @pytest.mark.parametrize("devices,io_mode", [(1, "prefetch"),
+                                                 (4, "sync"),
+                                                 (4, "prefetch")])
+    def test_cross_join_identical_pairs(self, tmp_path, devices, io_mode):
+        from repro.core import JoinConfig
+        from repro.core.join import similarity_cross_join
+        from repro.data import clustered_vectors
+        from repro.store.vector_store import FlatVectorStore
+
+        rng = np.random.default_rng(3)
+        x = clustered_vectors(2000, 32, seed=5)
+        y = (x[:1200] + rng.normal(scale=0.05, size=(1200, 32))
+             ).astype(np.float32)
+
+        def mk(a, name):
+            return FlatVectorStore.from_array(str(tmp_path / name), a)
+
+        base = dict(epsilon=0.3, pad_align=64, num_buckets=16,
+                    memory_budget_bytes=1 << 20, io_lookahead=8)
+        r_ref = similarity_cross_join(mk(x, "x0"), mk(y, "y0"),
+                                      JoinConfig(**base), io_mode="sync")
+        cfg = JoinConfig(io_devices=devices, io_batch_reads=True,
+                         io_coalesce=True, **base)
+        r = similarity_cross_join(mk(x, "x1"), mk(y, "y1"), cfg,
+                                  io_mode=io_mode)
+        assert r_ref.pairs.shape[0] > 0
+        assert _pair_keys(r.pairs) == _pair_keys(r_ref.pairs)
+
+    def test_coalescing_reduces_read_ops(self, small_dataset, tmp_store):
+        """Schedule-order layout + coalescing must merge adjacent misses:
+        fewer read ops for the same useful bytes, counters reported."""
+        from repro.core import JoinConfig
+        from repro.core.join import similarity_self_join
+
+        x, eps = small_dataset
+        base = dict(epsilon=eps, pad_align=64, num_buckets=24,
+                    memory_budget_bytes=1 << 20, io_lookahead=16,
+                    io_mode="prefetch")
+        r_plain = similarity_self_join(tmp_store(x), JoinConfig(**base))
+        r_co = similarity_self_join(
+            tmp_store(x[:, :]),
+            JoinConfig(io_batch_reads=True, io_coalesce=True, **base))
+        assert _pair_keys(r_co.pairs) == _pair_keys(r_plain.pairs)
+        p = r_co.io_stats["pipeline"]
+        assert p["batched_submissions"] > 0
+        assert p["coalesced_reads"] > 0
+        assert p["coalesced_buckets"] > p["coalesced_reads"]
+        assert (r_co.io_stats["read_ops"] < r_plain.io_stats["read_ops"])
+        assert (r_co.io_stats["bytes_read_useful"]
+                == r_plain.io_stats["bytes_read_useful"])
+
+    def test_config_validation(self):
+        from repro.core import JoinConfig
+        with pytest.raises(ValueError, match="io_devices"):
+            JoinConfig(epsilon=0.1, io_devices=0)
+        with pytest.raises(ValueError, match="io_stripe_by"):
+            JoinConfig(epsilon=0.1, io_stripe_by="rr")
+
+
+# ---------------------------------------------------------------------------
+# pair dedup: packed fast path vs ≥ 2^32 id fallback
+# ---------------------------------------------------------------------------
+class TestDedupPairs:
+    def test_small_ids_match_canonicalize(self):
+        from repro.core.types import canonicalize_pairs, dedup_pairs
+
+        rng = np.random.default_rng(0)
+        raw = rng.integers(0, 50, size=(200, 2))
+        pairs, _ = dedup_pairs(raw)
+        np.testing.assert_array_equal(pairs, canonicalize_pairs(raw))
+
+    def test_huge_ids_do_not_collide(self):
+        """(lo << 32) | hi packing collides for ids ≥ 2^32 — e.g. pairs
+        (0, 2^32) and (1, 0) both pack to key 2^32. The fallback must keep
+        them distinct."""
+        from repro.core.types import dedup_pairs
+
+        big = 1 << 32
+        raw = np.array([[0, big], [1, 0], [big, 0], [0, 1]], dtype=np.int64)
+        pairs, _ = dedup_pairs(raw)
+        assert _pair_keys(pairs) == {(0, 1), (0, big)}
+
+    def test_mid_band_ids_do_not_sign_overflow(self):
+        """ids in [2^31, 2^32): `lo << 32` would flip the int64 sign and
+        the arithmetic unshift would emit negative ids — must take the
+        lexicographic fallback."""
+        from repro.core.types import dedup_pairs
+
+        a = 1 << 31
+        raw = np.array([[a, a + 1], [a + 1, a], [3, a]], dtype=np.int64)
+        pairs, _ = dedup_pairs(raw)
+        assert (pairs >= 0).all()
+        assert _pair_keys(pairs) == {(a, a + 1), (3, a)}
+
+    def test_dists_follow_first_occurrence(self):
+        from repro.core.types import dedup_pairs
+
+        raw = np.array([[2, 1], [1, 2], [3, 4]])
+        d = np.array([0.5, 0.9, 0.1], np.float32)
+        pairs, dists = dedup_pairs(raw, d)
+        out = {tuple(p): float(v) for p, v in zip(pairs.tolist(), dists)}
+        assert out == {(1, 2): 0.5, (3, 4): pytest.approx(0.1)}
+
+    def test_huge_ids_with_dists(self):
+        from repro.core.types import dedup_pairs
+
+        big = 1 << 33
+        raw = np.array([[big + 5, 2], [2, big + 5], [7, 7]], dtype=np.int64)
+        d = np.array([0.3, 0.6, 0.0], np.float32)
+        pairs, dists = dedup_pairs(raw, d)
+        assert pairs.tolist() == [[2, big + 5]]  # self-pair dropped
+        assert dists[0] == pytest.approx(0.3)
+
+
+# ---------------------------------------------------------------------------
+# cache simulator: pinned-victim edge branches (previously untested)
+# ---------------------------------------------------------------------------
+class TestPinnedEviction:
+    def test_belady_pinned_victim_spill_path(self):
+        """The heap-top (furthest next access) is pinned: Belady must
+        spill past it, evict the next-furthest, and re-push the spilled
+        entries intact."""
+        from repro.core.cache import simulate_belady
+
+        seq = np.array([0, 1, 0, 2, 0])
+        pins = np.array([-1, -1, -1, 1, -1])
+        s = simulate_belady(seq, 3, capacity=2, pinned_partner=pins)
+        # at the miss on 2, bucket 1 (next access ∞) is pinned → evict 0
+        assert s.actions[3] == (2, False, 0)
+        # spilled entry survived: bucket 1 is still evictable afterwards
+        assert s.actions[4] == (0, False, 1)
+        assert s.hits == 1 and s.misses == 4
+
+    def test_belady_unpinned_baseline(self):
+        from repro.core.cache import simulate_belady
+
+        seq = np.array([0, 1, 0, 2, 0])
+        s = simulate_belady(seq, 3, capacity=2)
+        assert s.actions[3] == (2, False, 1)  # no pin → evict furthest
+        assert s.actions[4] == (0, True, None)
+
+    @pytest.mark.parametrize("policy", ["lru", "fifo"])
+    def test_policy_skips_pinned_victim(self, policy):
+        from repro.core.cache import simulate_policy
+
+        seq = np.array([0, 1, 2])
+        pins = np.array([-1, -1, 0])
+        s = simulate_policy(seq, 3, capacity=2, policy=policy,
+                            pinned_partner=pins)
+        # 0 would be the natural victim (oldest) but is pinned → evict 1
+        assert s.actions[2] == (2, False, 1)
+        s_nopin = simulate_policy(seq, 3, capacity=2, policy=policy)
+        assert s_nopin.actions[2] == (2, False, 0)
+
+    def test_lfu_skips_pinned_victim(self):
+        from repro.core.cache import simulate_policy
+
+        seq = np.array([0, 1, 1, 2])
+        pins = np.array([-1, -1, -1, 0])
+        s = simulate_policy(seq, 3, capacity=2, policy="lfu",
+                            pinned_partner=pins)
+        # 0 has min frequency but is pinned → evict 1 despite freq 2
+        assert s.actions[3] == (2, False, 1)
+
+    def test_unknown_policy_raises(self):
+        from repro.core.cache import simulate_policy
+
+        with pytest.raises(ValueError, match="unknown policy"):
+            simulate_policy(np.array([0, 1, 2]), 3, 2, policy="mru")
+
+
+# ---------------------------------------------------------------------------
+# distributed host-cache eviction: keep the UPCOMING window (regression)
+# ---------------------------------------------------------------------------
+class TestDistributedEviction:
+    def _store(self, tmp_path, num_buckets=6, dim=4):
+        from repro.store.vector_store import BucketedVectorStore
+
+        sizes = np.full(num_buckets, 2, np.int64)
+        rng = np.random.default_rng(0)
+        centers = rng.normal(size=(num_buckets, dim)).astype(np.float32)
+        w = BucketedVectorStore.create(str(tmp_path / "bk"), dim,
+                                       np.float32, sizes, centers,
+                                       np.ones(num_buckets, np.float32))
+        _filled_writer(w, sizes, dim)
+        return w.finalize(), centers, sizes
+
+    def test_host_hits_improve_on_overlapping_windows(self, tmp_path):
+        """Windows {0,1},{1,2},{1,5},{2,3},{3,4},{5}: bucket 2 is used in
+        windows 2 and 4 with a gap at 3, bucket 5 in windows 3 and 6.
+        Evicting on the *finished* window's keep-set drops both at their
+        gaps (3 hits / 8 loads); keeping the upcoming window retains
+        them — 5 hits / 6 loads — without parking dead slabs above the
+        memory budget."""
+        from repro.core.distributed import DistributedJoin
+        from repro.core.types import BucketGraph, BucketMeta, JoinConfig
+
+        store, centers, sizes = self._store(tmp_path)
+        meta = BucketMeta(centers=centers,
+                          radii=np.ones(6, np.float32), sizes=sizes)
+        graph = BucketGraph(num_nodes=6,
+                            edges=np.array([[1, 2], [1, 5], [3, 4]],
+                                           dtype=np.int64))
+        cfg = JoinConfig(epsilon=10.0, reorder=False, bucket_capacity=8,
+                         pad_align=8, num_buckets=6,
+                         memory_budget_bytes=2 * 8 * 4 * 4)  # 2 slots
+        dj = DistributedJoin(store, meta, cfg)
+        assert dj.cache_buckets == 2
+        pairs, info = dj.run(graph)
+        assert info["host_loads"] == 6   # 8 with the old keep-set bug
+        assert info["host_hits"] == 5    # 3 with the old keep-set bug
+        # result must still contain every epsilon-pair of the edge set
+        assert pairs.shape[0] > 0
