@@ -1,9 +1,14 @@
 """DiskJoin core — the paper's contribution as a composable JAX module.
 
 Public API:
+  DiskJoinIndex                    — build-once / query-many session:
+                                     build/open, self_join, cross_join,
+                                     online query/query_batch
   JoinConfig, JoinResult           — task configuration / output
-  similarity_self_join             — SSJ over an on-disk dataset
-  similarity_cross_join            — bipartite join over two datasets
+  BuildConfig, QueryConfig         — build-time vs query-time split of
+                                     JoinConfig (split_config/merge_config)
+  similarity_self_join             — one-shot SSJ (deprecated wrapper)
+  similarity_cross_join            — one-shot bipartite join (deprecated)
   bucketize / build_bucket_graph   — pipeline stages, individually usable
   gorder / simulate_policy         — orchestration primitives (Fig. 17)
 """
@@ -11,18 +16,25 @@ from repro.core.bucket_graph import build_bucket_graph, candidate_pair_count
 from repro.core.bucketize import bucketize
 from repro.core.cache import CacheSchedule, simulate_belady, simulate_policy
 from repro.core.executor import JoinExecutor
+from repro.core.index import DiskJoinIndex
 from repro.core.join import similarity_cross_join, similarity_self_join
 from repro.core.ordering import edge_schedule, gorder, window_size
 from repro.core.pruning import cap_constant, miss_bound_terms, prune_candidates
-from repro.core.types import (BucketGraph, BucketMeta, JoinConfig, JoinResult,
-                              canonicalize_pairs, dedup_pairs, recall)
+from repro.core.types import (BUILD_TIME_FIELDS, QUERY_TIME_FIELDS,
+                              TIMING_KEYS, BucketGraph, BucketMeta,
+                              BuildConfig, JoinConfig, JoinResult,
+                              QueryConfig, canonicalize_pairs, dedup_pairs,
+                              finalize_timings, merge_config, recall,
+                              split_config)
 
 __all__ = [
-    "BucketGraph", "BucketMeta", "CacheSchedule", "JoinConfig",
-    "JoinExecutor", "JoinResult", "bucketize", "build_bucket_graph",
-    "candidate_pair_count", "canonicalize_pairs", "cap_constant",
-    "dedup_pairs", "edge_schedule", "gorder", "miss_bound_terms",
+    "BUILD_TIME_FIELDS", "BucketGraph", "BucketMeta", "BuildConfig",
+    "CacheSchedule", "DiskJoinIndex", "JoinConfig", "JoinExecutor",
+    "JoinResult", "QUERY_TIME_FIELDS", "QueryConfig", "TIMING_KEYS",
+    "bucketize", "build_bucket_graph", "candidate_pair_count",
+    "canonicalize_pairs", "cap_constant", "dedup_pairs", "edge_schedule",
+    "finalize_timings", "gorder", "merge_config", "miss_bound_terms",
     "prune_candidates", "recall", "similarity_cross_join",
     "similarity_self_join", "simulate_belady", "simulate_policy",
-    "window_size",
+    "split_config", "window_size",
 ]

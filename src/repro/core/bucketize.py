@@ -135,6 +135,11 @@ def bucketize(store: FlatVectorStore, out_path: str, config: JoinConfig,
                          BucketMeta, dict]:
     """Full 3-scan bucketization → (bucketed store, metadata, timings).
 
+    ``config`` may be a flat ``JoinConfig`` or a bare ``BuildConfig`` —
+    bucketization consumes only build-time parameters (query-time knobs
+    like ``use_pallas``/``emulate_read_latency_s`` are read leniently,
+    defaulting off).
+
     ``layout_order_fn(meta) -> np.ndarray | None``: called once the final
     bucket metadata is known, *before* the write scan — returns the disk
     layout order (typically the join's Gorder node order, see
@@ -151,7 +156,8 @@ def bucketize(store: FlatVectorStore, out_path: str, config: JoinConfig,
 
     t0 = time.perf_counter()
     assignment, dist_sq = assign_blocks(
-        store, centers, config.block_rows, use_pallas=config.use_pallas)
+        store, centers, config.block_rows,
+        use_pallas=getattr(config, "use_pallas", False))
     timings["assign"] = time.perf_counter() - t0
 
     max_rows = config.max_bucket_rows
@@ -198,6 +204,6 @@ def bucketize(store: FlatVectorStore, out_path: str, config: JoinConfig,
                            stripe_by=config.io_stripe_by,
                            stripe_chunk=stripe_chunk)
     timings["write"] = time.perf_counter() - t0
-    bstore.read_latency_s = config.emulate_read_latency_s
+    bstore.read_latency_s = getattr(config, "emulate_read_latency_s", 0.0)
 
     return bstore, meta, timings

@@ -107,14 +107,24 @@ class JoinExecutor:
 
     def __init__(self, store: BucketedVectorStore, meta: BucketMeta,
                  config: JoinConfig,
-                 attribute_mask: np.ndarray | None = None):
+                 attribute_mask: np.ndarray | None = None,
+                 shared_pool=None, shared_stats=None):
         """``attribute_mask``: (N,) bool — attribute filtering (paper §3
         extension): vectors failing the predicate are excluded from
-        verification via a bitmap, before any distance is computed."""
+        verification via a bitmap, before any distance is computed.
+
+        ``shared_pool`` / ``shared_stats``: a ``DiskJoinIndex`` session's
+        lifetime ``BufferPool`` and ``PipelineStats`` — batch joins and
+        online point queries then share one memory budget and one
+        telemetry surface. The pool is used only when its slab shape and
+        size fit this run (otherwise a private pool is created; the stats
+        are shared regardless)."""
         self.store = store
         self.meta = meta
         self.config = config
         self.attribute_mask = attribute_mask
+        self.shared_pool = shared_pool
+        self.shared_stats = shared_stats
         cap = resolve_bucket_capacity(config, meta.sizes)
         self.bucket_capacity = cap
         self.padded_bucket_bytes = cap * store.dim * 4
@@ -144,20 +154,27 @@ class JoinExecutor:
     def _make_cache(self, schedule):
         """Cache backend per JoinConfig.io_mode (+ pipeline stats or None)."""
         if self.config.io_mode != "prefetch":
-            return BucketCache(self.store, self.bucket_capacity), None
+            return (BucketCache(self.store, self.bucket_capacity),
+                    self.shared_stats)
         from repro.io import PipelineStats, PrefetchedBucketCache
         cap_buckets = min(self.cache_buckets, self.meta.num_buckets or 1)
         pool_slabs = self.config.io_pool_slabs
         if pool_slabs is None:
             pool_slabs = cap_buckets + self.config.io_lookahead
         pool_slabs = max(pool_slabs, cap_buckets + 1)  # liveness floor
-        stats = PipelineStats()
+        stats = (self.shared_stats if self.shared_stats is not None
+                 else PipelineStats())
+        pool = self.shared_pool
+        if pool is not None and (pool.capacity_rows != self.bucket_capacity
+                                 or pool.dim != self.store.dim
+                                 or pool.num_slabs < pool_slabs):
+            pool = None  # session pool doesn't fit this run: go private
         cache = PrefetchedBucketCache(
             self.store, self.bucket_capacity, schedule.actions,
             lookahead=self.config.io_lookahead, pool_slabs=pool_slabs,
             num_threads=self.config.io_threads, pad_value=PAD_COORD,
             batch_reads=self.config.io_batch_reads,
-            coalesce=self.config.io_coalesce, stats=stats)
+            coalesce=self.config.io_coalesce, stats=stats, pool=pool)
         return cache, stats
 
     def run(self, graph: BucketGraph,
@@ -165,6 +182,10 @@ class JoinExecutor:
         tasks, access_seq, schedule, plan_seconds = self.plan(graph,
                                                              node_order)
         cache, pstats = self._make_cache(schedule)
+        # on a session's lifetime stats, this run's result must still
+        # report per-run numbers: diff against a baseline at the end
+        pstats_base = (pstats.snapshot() if pstats is not None
+                       and self.shared_stats is not None else None)
         eps = float(self.config.epsilon)
 
         pairs_out: list[np.ndarray] = []
@@ -266,6 +287,13 @@ class JoinExecutor:
                     enqueue(int(u), int(v), False)
             flush()
         finally:
+            # an exception mid-run leaves checkout pins in the pending
+            # batch; on a shared (session) pool they would leak for the
+            # session's lifetime and starve the next join's liveness floor
+            for ea, eb, _ in batch:
+                cache.release(ea)
+                cache.release(eb)
+            batch.clear()
             cache.close()
         exec_seconds = time.perf_counter() - t0
 
@@ -282,7 +310,13 @@ class JoinExecutor:
         if pstats is not None:
             pstats.add("io_wait_s", io_wait)
             pstats.add("compute_s", compute_t)
-            io_stats["pipeline"] = pstats.snapshot()
+            if self.config.io_mode != "prefetch":
+                # prefetch-mode loads are counted at pop_next; count sync
+                # loads here so a session's stats see both join kinds
+                pstats.add("loads", cache.loads)
+            io_stats["pipeline"] = (pstats.snapshot_since(pstats_base)
+                                    if pstats_base is not None
+                                    else pstats.snapshot())
 
         from repro.core.bucket_graph import candidate_pair_count
         return JoinResult(

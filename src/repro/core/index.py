@@ -1,0 +1,676 @@
+"""Build-once / query-many DiskJoin session API.
+
+The paper's workflow (bucketize → graph → orchestrate → execute, §3) was
+exposed as one-shot free functions, so every ε-sweep, ablation and
+benchmark re-bucketized and re-laid-out the dataset from scratch.
+``DiskJoinIndex`` makes the expensive build a persisted artifact and every
+threshold query a cheap pass over it — the same split work-sharing vector
+join systems (Kim et al.) and I/O-efficient LSH joins (Pagh et al.) use to
+amortize partitioning across many queries:
+
+    index = DiskJoinIndex.build(store, config, workdir)   # bucketize ONCE
+    r1 = index.self_join(epsilon=0.2)     # graph/schedule only
+    r2 = index.self_join(epsilon=0.3)     # reuses bucketing + warm cache
+    ids, dists = index.query(q, epsilon=0.25)   # online point lookup
+    ...
+    index = DiskJoinIndex.open(workdir)   # reattach later, no rescan
+
+``build`` writes a manifest (build config, layout order, store kind) next
+to the bucketed store, so ``open`` reattaches without touching the flat
+dataset. The instance owns, for its lifetime, the bucketed/striped store,
+ONE ``BufferPool`` and ONE ``PipelineStats``: batch joins and online point
+queries share a single slab memory budget and a single telemetry surface
+(the ROADMAP "serving integration" item — ``repro.serve`` wraps ``query``
+in a thin ``VectorQueryService``).
+
+Configuration is split at the build/query boundary (``repro.core.types``):
+build-time parameters are frozen in the manifest and rejected as per-call
+overrides, so a query can never silently invalidate the on-disk layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import threading
+import time
+from collections import OrderedDict
+
+import numpy as np
+
+from repro.core import ordering
+from repro.core.bipartite import bipartite_join
+from repro.core.bucket_graph import build_bucket_graph
+from repro.core.bucketize import bucketize
+from repro.core.center_index import make_center_index
+from repro.core.executor import PAD_COORD, JoinExecutor
+from repro.core.pruning import prune_candidates
+from repro.core.types import (BUILD_TIME_FIELDS, QUERY_TIME_FIELDS,
+                              BucketMeta, BuildConfig, JoinConfig,
+                              JoinResult, QueryConfig, finalize_timings,
+                              merge_config, resolve_bucket_capacity,
+                              resolve_cache_buckets, split_config)
+from repro.io import BufferPool, PipelineStats
+from repro.store.striped_store import StripedBucketedVectorStore
+from repro.store.vector_store import BucketedVectorStore, FlatVectorStore
+
+MANIFEST_NAME = "diskjoin_index.json"
+MANIFEST_FORMAT = "diskjoin-index/v1"
+# pool slabs the query warm cache always leaves free (liveness headroom
+# for concurrent batch joins and for the queries' own transient reads)
+_WARM_RESERVE = 2
+
+
+class DiskJoinIndex:
+    """Persistent session over one bucketized dataset. Use ``build``/``open``."""
+
+    def __init__(self, workdir: str, store, meta: BucketMeta,
+                 build_config: BuildConfig,
+                 query_defaults: QueryConfig | None,
+                 build_timings: dict | None = None,
+                 build_seconds: float = 0.0):
+        self.workdir = workdir
+        self.store = store                  # bucketed (possibly striped)
+        self.meta = meta
+        self.build_config = build_config
+        self.query_defaults = query_defaults
+        self.build_timings = dict(build_timings or {})
+        self.build_seconds = float(build_seconds)
+        self.stats = PipelineStats()        # ONE lifetime telemetry surface
+        self.bucket_capacity = resolve_bucket_capacity(build_config,
+                                                       meta.sizes)
+        self._pool: BufferPool | None = None
+        self._pool_lock = threading.Lock()
+        self._center_index = None
+        self._graph_cache: dict = {}
+        self._order_cache: dict = {}
+        # warm point-query cache: bucket -> (pool slot, rows); each entry
+        # holds one pool reference (dropped while batch joins run)
+        self._warm: OrderedDict[int, tuple[int, int]] = OrderedDict()
+        self._warm_lock = threading.RLock()
+        self._joins_active = 0
+        self._closed = False
+
+    # -- construction ---------------------------------------------------------
+    @classmethod
+    def build(cls, store: FlatVectorStore,
+              config: JoinConfig | BuildConfig,
+              workdir: str | None = None, *,
+              layout: str = "auto") -> "DiskJoinIndex":
+        """Bucketize + lay out ``store`` once under ``workdir`` and return
+        the attached session. ``config`` may be a flat ``JoinConfig`` (its
+        query-time half becomes the session's per-call defaults) or a bare
+        ``BuildConfig`` (then every query call must pass ``epsilon``).
+
+        ``layout`` chooses the disk extent order used when coalescing or
+        striping is on: ``"auto"`` plans the join schedule order for the
+        config's default parameters (schedule-adjacent ⇒ disk-adjacent);
+        ``"spatial"`` uses the ε-free nearest-neighbor center tour (the
+        right choice when the index mostly serves cross-joins or wide
+        ε-sweeps). Without coalescing/striping no reordering is needed.
+        """
+        if isinstance(config, BuildConfig):
+            build_cfg, query_defaults = config, None
+        else:
+            build_cfg, query_defaults = split_config(config)
+        if layout not in ("auto", "spatial"):
+            raise ValueError(f"layout must be 'auto' or 'spatial', "
+                             f"got {layout!r}")
+        workdir = workdir or tempfile.mkdtemp(prefix="diskjoin_index_")
+        os.makedirs(workdir, exist_ok=True)
+
+        # disk-layout planning (only when coalescing/striping can use it):
+        # the write scan needs the extent order *before* it lays them out
+        plan_cache: dict = {}
+        wants_layout = build_cfg.io_coalesce or build_cfg.io_devices > 1
+        layout_fn = None
+        if wants_layout:
+            if layout == "auto" and query_defaults is not None:
+                flat = merge_config(build_cfg, query_defaults)
+
+                def layout_fn(meta):
+                    graph = build_bucket_graph(meta, flat)
+                    cap = resolve_bucket_capacity(flat, meta.sizes)
+                    cache_buckets = resolve_cache_buckets(flat, cap,
+                                                          store.dim)
+                    order = ordering.compute_node_order(graph, meta, flat,
+                                                        cache_buckets)
+                    plan_cache.update(graph=graph, order=order,
+                                      cache_buckets=cache_buckets)
+                    return order
+            else:
+                def layout_fn(meta):
+                    order = ordering.spatial_order(meta.centers)
+                    plan_cache.update(order=order)
+                    return order
+
+        t0 = time.perf_counter()
+        bstore, meta, bt = bucketize(store, os.path.join(workdir, "buckets"),
+                                     config, layout_order_fn=layout_fn)
+        build_seconds = time.perf_counter() - t0
+
+        index = cls(workdir, bstore, meta, build_cfg, query_defaults,
+                    build_timings=bt, build_seconds=build_seconds)
+        layout_kind = None
+        if "graph" in plan_cache and query_defaults is not None:
+            # the layout pass already planned the default-config join;
+            # seed the session caches so the first self_join reuses it
+            layout_kind = "schedule"
+            flat = merge_config(build_cfg, query_defaults)
+            gkey = index._graph_key(flat)
+            index._graph_cache[gkey] = plan_cache["graph"]
+            index._order_cache[(gkey, flat.order_strategy, flat.reorder,
+                                plan_cache["cache_buckets"])] = \
+                plan_cache["order"]
+        elif "order" in plan_cache:
+            layout_kind = "spatial"
+        index._write_manifest(plan_cache.get("order"), layout_kind)
+        return index
+
+    @classmethod
+    def open(cls, workdir: str,
+             config: JoinConfig | QueryConfig | None = None
+             ) -> "DiskJoinIndex":
+        """Reattach to an index built earlier in ``workdir`` — no dataset
+        rescan; the bucketed store and manifest are read as-is.
+
+        ``config`` optionally replaces the session's query-time defaults.
+        Passing a flat ``JoinConfig`` validates its build-time half against
+        the manifest (mismatch raises — the on-disk layout cannot be
+        changed by opening it differently)."""
+        path = os.path.join(workdir, MANIFEST_NAME)
+        with open(path) as f:
+            m = json.load(f)
+        if m.get("format") != MANIFEST_FORMAT:
+            raise ValueError(f"{path}: not a {MANIFEST_FORMAT} manifest")
+        build_cfg = BuildConfig(**m["build"])
+        manifest_defaults = (QueryConfig(**m["query_defaults"])
+                             if m.get("query_defaults") else None)
+        query_defaults = manifest_defaults
+        if isinstance(config, JoinConfig):
+            got_build, query_defaults = split_config(config)
+            if got_build != build_cfg:
+                diff = [f.name for f in dataclasses.fields(BuildConfig)
+                        if getattr(got_build, f.name)
+                        != getattr(build_cfg, f.name)]
+                raise ValueError(
+                    f"build-time parameters {diff} differ from the on-disk "
+                    f"index at {workdir}; rebuild with DiskJoinIndex.build "
+                    f"to change them")
+        elif isinstance(config, QueryConfig):
+            query_defaults = config
+        elif config is not None:
+            raise TypeError("config must be JoinConfig, QueryConfig or None")
+        store_path = os.path.join(workdir, m["store"])
+        store = (StripedBucketedVectorStore(store_path) if m["striped"]
+                 else BucketedVectorStore(store_path))
+        if query_defaults is not None:
+            store.read_latency_s = query_defaults.emulate_read_latency_s
+        meta = BucketMeta(centers=store.centers, radii=store.radii,
+                          sizes=np.asarray(store.bucket_sizes))
+        index = cls(workdir, store, meta, build_cfg, query_defaults,
+                    build_timings=m.get("build_timings"),
+                    build_seconds=m.get("build_seconds", 0.0))
+        if (m.get("layout_kind") == "schedule"
+                and m.get("layout_order") is not None
+                and manifest_defaults is not None):
+            # the persisted layout IS the schedule order planned for the
+            # MANIFEST's defaults — seed the order cache under that key
+            # so a reattached session's first matching self_join skips
+            # the gorder recompute (same key derivation as build)
+            flat = merge_config(build_cfg, manifest_defaults)
+            gkey = index._graph_key(flat)
+            cache_buckets = resolve_cache_buckets(flat,
+                                                  index.bucket_capacity,
+                                                  store.dim)
+            index._order_cache[(gkey, flat.order_strategy, flat.reorder,
+                                cache_buckets)] = \
+                np.asarray(m["layout_order"], dtype=np.int64)
+        return index
+
+    def _write_manifest(self, layout_order, layout_kind) -> None:
+        manifest = {
+            "format": MANIFEST_FORMAT,
+            "store": "buckets",
+            "striped": self.store.__class__ is StripedBucketedVectorStore,
+            "dim": int(self.store.dim),
+            "num_buckets": int(self.meta.num_buckets),
+            "num_vectors": int(self.meta.sizes.sum()),
+            "build": dataclasses.asdict(self.build_config),
+            "query_defaults": (dataclasses.asdict(self.query_defaults)
+                               if self.query_defaults is not None else None),
+            "layout_kind": layout_kind,
+            "layout_order": (np.asarray(layout_order).tolist()
+                             if layout_order is not None else None),
+            "build_seconds": self.build_seconds,
+            "build_timings": self.build_timings,
+        }
+        with open(os.path.join(self.workdir, MANIFEST_NAME), "w") as f:
+            json.dump(manifest, f)
+
+    # -- shape ---------------------------------------------------------------
+    @property
+    def num_vectors(self) -> int:
+        return int(self.meta.sizes.sum())
+
+    @property
+    def num_buckets(self) -> int:
+        return self.meta.num_buckets
+
+    @property
+    def dim(self) -> int:
+        return self.store.dim
+
+    # -- config resolution ---------------------------------------------------
+    def _resolve(self, overrides: dict) -> JoinConfig:
+        """Merge per-call query-time overrides over the session defaults.
+
+        Build-time keys are rejected outright: the on-disk layout cannot
+        be changed by a query, only by a rebuild."""
+        bad = sorted(set(overrides) & BUILD_TIME_FIELDS)
+        if bad:
+            raise ValueError(
+                f"build-time parameter(s) {bad} are fixed by the on-disk "
+                f"index; rebuild with DiskJoinIndex.build to change them")
+        unknown = sorted(set(overrides) - QUERY_TIME_FIELDS)
+        if unknown:
+            raise TypeError(f"unknown query-time parameter(s) {unknown}")
+        if self.query_defaults is None:
+            if "epsilon" not in overrides:
+                raise ValueError(
+                    "epsilon is required: the index was built from a bare "
+                    "BuildConfig and has no query-time defaults")
+            query = QueryConfig(**overrides)
+        else:
+            query = dataclasses.replace(self.query_defaults, **overrides)
+        cfg = merge_config(self.build_config, query)
+        self.store.read_latency_s = cfg.emulate_read_latency_s
+        return cfg
+
+    # -- per-ε planning caches ------------------------------------------------
+    @staticmethod
+    def _graph_key(cfg: JoinConfig):
+        return (float(cfg.epsilon), float(cfg.recall_target),
+                int(cfg.max_candidates), bool(cfg.prune))
+
+    def _graph_for(self, cfg: JoinConfig):
+        """Bucket graph for these query params → (graph, seconds, key).
+        Repeat calls at the same (ε, λ, L, prune) reuse the cached graph."""
+        key = self._graph_key(cfg)
+        graph = self._graph_cache.get(key)
+        if graph is not None:
+            return graph, 0.0, key
+        t0 = time.perf_counter()
+        graph = build_bucket_graph(self.meta, cfg)
+        graph_s = time.perf_counter() - t0
+        self._graph_cache[key] = graph
+        return graph, graph_s, key
+
+    def _order_for(self, graph, cfg: JoinConfig, cache_buckets: int, gkey):
+        key = (gkey, cfg.order_strategy, cfg.reorder, cache_buckets)
+        order = self._order_cache.get(key)
+        if order is None:
+            order = ordering.compute_node_order(graph, self.meta, cfg,
+                                                cache_buckets)
+            self._order_cache[key] = order
+        return order
+
+    # -- session buffer pool --------------------------------------------------
+    def _ensure_pool(self, cfg: JoinConfig) -> BufferPool:
+        """The session's one BufferPool: sized for a batch join at these
+        query params plus warm-cache headroom; created on first use."""
+        with self._pool_lock:
+            if self._pool is None:
+                cap_buckets = min(
+                    resolve_cache_buckets(cfg, self.bucket_capacity,
+                                          self.store.dim),
+                    self.meta.num_buckets or 1)
+                slabs = cfg.io_pool_slabs
+                if slabs is None:
+                    slabs = cap_buckets + cfg.io_lookahead
+                slabs = max(slabs, cap_buckets + 1) + _WARM_RESERVE
+                self._pool = BufferPool(slabs, self.bucket_capacity,
+                                        self.store.dim)
+            return self._pool
+
+    # -- batch joins ----------------------------------------------------------
+    def self_join(self, *, attribute_mask: np.ndarray | None = None,
+                  **overrides) -> JoinResult:
+        """ε-self-join over the built index. Query-time parameters
+        (``epsilon=…``, ``io_mode=…``, ``memory_budget_bytes=…``, …) are
+        per-call overrides; bucketization is never repeated — repeated
+        calls re-derive only the graph/schedule (cached per ε)."""
+        cfg = self._resolve(overrides)
+        graph, graph_s, gkey = self._graph_for(cfg)
+        pool = (self._ensure_pool(cfg) if cfg.io_mode == "prefetch"
+                else None)
+        executor = JoinExecutor(self.store, self.meta, cfg,
+                                attribute_mask=attribute_mask,
+                                shared_pool=pool, shared_stats=self.stats)
+        node_order = self._order_for(graph, cfg, executor.cache_buckets,
+                                     gkey)
+        self._begin_join()
+        try:
+            result = executor.run(graph, node_order=node_order)
+        finally:
+            self._end_join()
+        result.timings = finalize_timings(result.timings, graph_s)
+        return result
+
+    def cross_join(self, other: "DiskJoinIndex", *,
+                   reorder_larger: bool = True,
+                   attribute_mask: np.ndarray | None = None,
+                   **overrides) -> JoinResult:
+        """Bipartite ε-join against another index (paper §3 extension).
+
+        Result ids: this index's vectors keep their ids in
+        ``[0, self.num_vectors)``; ``other``'s are offset by
+        ``self.num_vectors``. ``attribute_mask`` is a
+        ``(self.num_vectors + other.num_vectors,)`` bool array over that
+        combined id space — pairs survive only if both endpoints pass.
+        ``reorder_larger=True`` streams the larger side in schedule order
+        and caches the smaller (the paper's DiskJoin1); False flips it.
+        """
+        cfg = self._resolve(overrides)
+        n_x, n_y = self.num_vectors, other.num_vectors
+        if attribute_mask is not None:
+            attribute_mask = np.asarray(attribute_mask, dtype=bool)
+            if attribute_mask.shape != (n_x + n_y,):
+                raise ValueError(
+                    f"attribute_mask must cover the combined id space "
+                    f"({n_x + n_y},), got {attribute_mask.shape}")
+        big_first = n_x >= n_y
+        if not reorder_larger:
+            big_first = not big_first
+        drive, cached = (self, other) if big_first else (other, self)
+        drive_is_x = drive is self
+        # session pool as for self_join; the executor falls back to a
+        # private pool when the combined bucket capacity doesn't fit it
+        pool = (self._ensure_pool(cfg) if cfg.io_mode == "prefetch"
+                else self._pool)
+        self._begin_join()
+        try:
+            result, graph_s = bipartite_join(
+                drive.store, drive.meta, cached.store, cached.meta, cfg,
+                drive_id_offset=0 if drive_is_x else n_x,
+                cache_id_offset=n_x if drive_is_x else 0,
+                attribute_mask=attribute_mask,
+                shared_pool=pool, shared_stats=self.stats)
+        finally:
+            self._end_join()
+        result.timings = finalize_timings(result.timings, graph_s)
+        return result
+
+    def _begin_join(self) -> None:
+        # batch joins take the executor's liveness floor on the shared
+        # pool; warm query slabs are dropped so they can never starve it
+        with self._warm_lock:
+            self._joins_active += 1
+            self._drop_warm_locked()
+
+    def _end_join(self) -> None:
+        with self._warm_lock:
+            self._joins_active -= 1
+
+    # -- online point queries -------------------------------------------------
+    def query(self, q: np.ndarray, epsilon: float | None = None,
+              **overrides) -> tuple[np.ndarray, np.ndarray]:
+        """ε-range lookup for one query vector → (ids, distances)."""
+        out = self.query_batch(np.asarray(q, np.float32)[None, :],
+                               epsilon, **overrides)
+        return out[0]
+
+    def query_batch(self, Q: np.ndarray, epsilon: float | None = None,
+                    **overrides) -> list[tuple[np.ndarray, np.ndarray]]:
+        """ε-range lookups for a batch of query vectors.
+
+        Routing (the ROADMAP serving item): candidate buckets come from
+        the center index + point triangle inequality + Eq. 3 pruning;
+        their reads go through the session's shared ``BufferPool`` (and,
+        in ``io_mode="prefetch"``, a schedule prefetcher), land in the
+        same ``PipelineStats`` as batch joins, and recently-read buckets
+        stay warm in pool slabs for subsequent queries. Returns one
+        (ids, distances) pair per query, unsorted, with exact distances
+        (perfect precision; recall governed by ``recall_target``).
+        """
+        if epsilon is not None:
+            overrides["epsilon"] = epsilon
+        cfg = self._resolve(overrides)
+        Q = np.ascontiguousarray(np.atleast_2d(np.asarray(Q, np.float32)))
+        if Q.shape[1] != self.dim:
+            raise ValueError(f"query dim {Q.shape[1]} != index dim {self.dim}")
+        eps = float(cfg.epsilon)
+
+        per_q = self._candidate_buckets(Q, cfg)
+        # bucket -> probing query rows, in first-probe order
+        probe: dict[int, list[int]] = {}
+        for qi, ids in enumerate(per_q):
+            for b in ids:
+                probe.setdefault(int(b), []).append(qi)
+
+        acc_ids: list[list[np.ndarray]] = [[] for _ in range(Q.shape[0])]
+        acc_d: list[list[np.ndarray]] = [[] for _ in range(Q.shape[0])]
+
+        def verify(b: int, vecs: np.ndarray, ids_: np.ndarray,
+                   n: int) -> None:
+            live, lids = vecs[:n], ids_[:n]
+            qidx = probe[b]
+            qs = Q[qidx].astype(np.float64)
+            lv = live.astype(np.float64)
+            d2 = ((qs * qs).sum(1)[:, None] - 2.0 * qs @ lv.T
+                  + (lv * lv).sum(1)[None, :])
+            mask = d2 <= eps * eps
+            for row, qi in enumerate(qidx):
+                m = mask[row]
+                if m.any():
+                    acc_ids[qi].append(lids[m].astype(np.int64))
+                    acc_d[qi].append(
+                        np.sqrt(np.maximum(d2[row][m], 0.0))
+                        .astype(np.float32))
+
+        self._read_and_verify(list(probe), cfg, verify)
+        self.stats.add("queries", Q.shape[0])
+
+        out = []
+        for qi in range(Q.shape[0]):
+            if acc_ids[qi]:
+                out.append((np.concatenate(acc_ids[qi]),
+                            np.concatenate(acc_d[qi])))
+            else:
+                out.append((np.zeros(0, np.int64), np.zeros(0, np.float32)))
+        return out
+
+    def _candidate_buckets(self, Q: np.ndarray,
+                           cfg: JoinConfig) -> list[np.ndarray]:
+        """Per-query candidate bucket ids: center search, point triangle
+        inequality (‖q − c_b‖ − r_b ≤ ε), then Eq. 3 pruning with the
+        query ball radius ε."""
+        if self._center_index is None:
+            self._center_index = make_center_index(self.meta.centers)
+        eps = float(cfg.epsilon)
+        L = min(cfg.max_candidates, self.meta.num_buckets)
+        d2, cand = self._center_index.search(Q, L)
+        dists = np.sqrt(np.maximum(d2, 0.0))
+        out = []
+        for qi in range(Q.shape[0]):
+            ids, dd = cand[qi], dists[qi]
+            ok = np.isfinite(dd)
+            ids, dd = ids[ok], dd[ok]
+            near = dd - self.meta.radii[ids] <= eps
+            ids, dd = ids[near], dd[near]
+            if cfg.prune and ids.size:
+                keep = prune_candidates(dd, eps, self.dim,
+                                        cfg.recall_target,
+                                        cand_radii=self.meta.radii[ids])
+                ids = ids[keep]
+            out.append(ids.astype(np.int64))
+        return out
+
+    def _read_and_verify(self, buckets: list[int], cfg: JoinConfig,
+                         verify) -> None:
+        """Serve ``verify(b, vecs, ids, rows)`` for every bucket, routing
+        reads through the session pool.
+
+        Liveness under concurrency (a batch join may be running against
+        the same pool): warm hits only *pin* already-resident slabs; fresh
+        reads hold at most one transient slab each and release it right
+        after verification; when the pool is fully contended the read
+        falls back to a plain store read (counted) instead of blocking —
+        queries therefore never hold-and-wait against the executor."""
+        pool = self._ensure_pool(cfg)
+        warm_hits = 0
+        misses: list[int] = []
+        for b in buckets:
+            with self._warm_lock:
+                ent = self._warm.get(b)
+                if ent is not None:
+                    slot, rows = ent
+                    pool.pin(slot)
+                    self._warm.move_to_end(b)
+                else:
+                    slot = None
+            if slot is None:
+                misses.append(b)
+            else:
+                try:
+                    verify(b, pool.vecs(slot), pool.ids(slot), rows)
+                finally:
+                    pool.unpin(slot)
+                warm_hits += 1
+        if warm_hits:
+            self.stats.add("query_warm_hits", warm_hits)
+        if not misses:
+            return
+
+        if cfg.io_mode == "prefetch" and len(misses) > 1:
+            self._read_misses_prefetch(misses, cfg, pool, verify)
+        else:
+            self._read_misses_sync(misses, pool, verify)
+
+    def _read_misses_sync(self, misses: list[int], pool: BufferPool,
+                          verify) -> None:
+        for b in misses:
+            self._make_room(pool)
+            slot = pool.try_acquire()
+            if slot is None:
+                # pool fully contended (e.g. a concurrent batch join):
+                # bounded-latency fallback instead of hold-and-wait
+                size = int(self.meta.sizes[b])
+                vecs = np.empty((size, self.dim), np.float32)
+                ids = np.empty(size, np.int64)
+                n = self.store.read_bucket_into(b, vecs, ids,
+                                                pad_value=PAD_COORD)
+                self.stats.add("query_fallback_reads", 1)
+                verify(b, vecs, ids, n)
+                continue
+            n = self.store.read_bucket_into(b, pool.vecs(slot),
+                                            pool.ids(slot),
+                                            pad_value=PAD_COORD)
+            self.stats.add("query_reads", 1)
+            try:
+                verify(b, pool.vecs(slot), pool.ids(slot), n)
+            finally:
+                self._retain_or_release(b, slot, n, pool)
+
+    def _read_misses_prefetch(self, misses: list[int], cfg: JoinConfig,
+                              pool: BufferPool, verify) -> None:
+        """Batch-friendly path: a schedule prefetcher overlaps the misses'
+        reads (per-device queues, batching/coalescing as configured)."""
+        from repro.io import SchedulePrefetcher
+        actions = [(b, False, None) for b in misses]
+        pf = SchedulePrefetcher(
+            self.store, actions, pool, lookahead=cfg.io_lookahead,
+            num_threads=cfg.io_threads, stats=self.stats,
+            pad_value=PAD_COORD, batch_reads=cfg.io_batch_reads,
+            coalesce=cfg.io_coalesce, close_pool=False)
+        try:
+            for _ in misses:
+                b, slot, n = pf.pop_next()
+                self.stats.add("query_reads", 1)
+                try:
+                    verify(b, pool.vecs(slot), pool.ids(slot), n)
+                finally:
+                    self._retain_or_release(b, slot, n, pool)
+        finally:
+            pf.close()
+
+    # -- warm query cache -----------------------------------------------------
+    def _retain_or_release(self, b: int, slot: int, rows: int,
+                           pool: BufferPool) -> None:
+        """Keep a freshly-read slab warm for later queries when no batch
+        join needs the pool and headroom remains; else release it."""
+        with self._warm_lock:
+            cap = pool.num_slabs - _WARM_RESERVE
+            if (self._joins_active == 0 and b not in self._warm
+                    and len(self._warm) < cap):
+                self._warm[b] = (slot, rows)
+                return
+        pool.unpin(slot)
+
+    def _make_room(self, pool: BufferPool) -> None:
+        """Evict warm LRU entries until at least one pool slab is free
+        (the warm cache must never block the queries that feed it)."""
+        with self._warm_lock:
+            while self._warm and pool.in_use >= pool.num_slabs - 1:
+                _, (slot, _) = self._warm.popitem(last=False)
+                pool.unpin(slot)
+
+    def _drop_warm_locked(self) -> None:
+        while self._warm:
+            _, (slot, _) = self._warm.popitem(last=False)
+            self._pool.unpin(slot)
+
+    def drop_warm_cache(self) -> None:
+        """Release every warm query slab (benchmark cold-start helper)."""
+        with self._warm_lock:
+            self._drop_warm_locked()
+
+    def warm_buckets(self) -> list[int]:
+        with self._warm_lock:
+            return list(self._warm)
+
+    # -- telemetry / lifecycle ------------------------------------------------
+    def pipeline_snapshot(self) -> dict:
+        """The session's single PipelineStats snapshot: batch-join loads
+        and online query reads appear in one surface."""
+        return self.stats.snapshot()
+
+    def io_snapshot(self) -> dict:
+        return self.store.stats.snapshot()
+
+    def merge_build_timings(self, timings: dict) -> dict:
+        """Fold this index's (amortized) build cost into a result's
+        timings — the deprecated one-shot wrappers use this to keep the
+        legacy "bucketing included" schema."""
+        sub = dict(self.build_timings)
+        layout_s = sub.pop("layout_plan", 0.0)
+        t = dict(timings)
+        t["bucketing"] = t.get("bucketing", 0.0) + self.build_seconds \
+            - layout_s
+        for k, v in sub.items():
+            t[f"bucketing/{k}"] = t.get(f"bucketing/{k}", 0.0) + v
+        if layout_s:
+            t["orchestration"] = t.get("orchestration", 0.0) + layout_s
+            t["orchestration/layout_plan"] = \
+                t.get("orchestration/layout_plan", 0.0) + layout_s
+        return t
+
+    def close(self) -> None:
+        """Release the session: warm slabs, pool, store handles. The
+        on-disk index remains and can be re-``open``ed."""
+        if self._closed:
+            return
+        self._closed = True
+        with self._warm_lock:
+            if self._pool is not None:
+                self._drop_warm_locked()
+        if self._pool is not None:
+            self._pool.close()
+        self.store.close()
+
+    def __enter__(self) -> "DiskJoinIndex":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

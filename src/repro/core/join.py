@@ -1,32 +1,51 @@
-"""DiskJoin top-level API (paper §3 workflow).
+"""DiskJoin one-shot API (paper §3 workflow) — DEPRECATED wrappers.
 
     similarity_self_join(store, config)  →  JoinResult
     similarity_cross_join(store_x, store_y, config) → JoinResult
 
-Pipeline: bucketize → bucket graph (+ pruning) → orchestrate (Gorder +
-Belady) → execute (kernel verify). Cross-join follows §3's recipe: bucketize
-each dataset, bipartite bucket graph, reorder the *larger* side (streamed
-once) and cache the smaller.
+Both are now thin shims over the build-once / query-many session API
+(``repro.core.index.DiskJoinIndex``): they build a throwaway index in the
+workdir, run exactly one join against it, fold the build time back into
+the result's timings (legacy "bucketing included" schema) and close the
+session. Every ε-sweep or repeated call through these functions
+re-bucketizes from scratch — build a ``DiskJoinIndex`` once instead:
+
+    index = DiskJoinIndex.build(store, config, workdir)
+    index.self_join(epsilon=...)          # bucketization amortized
+    index.cross_join(other_index, ...)
+    index.query(q, epsilon=...)           # online point lookups
+
+Each wrapper emits a ``DeprecationWarning`` once per process.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
 import tempfile
-import time
+import warnings
 
-import numpy as np
-
-from repro.core import ordering
-from repro.core.bucket_graph import build_bucket_graph
-from repro.core.bucketize import bucketize
-from repro.core.center_index import make_center_index
-from repro.core.executor import JoinExecutor
-from repro.core.pruning import prune_candidates
-from repro.core.types import (BucketGraph, BucketMeta, JoinConfig,
-                              JoinResult, resolve_bucket_capacity,
-                              resolve_cache_buckets)
+from repro.core.bipartite import (CombinedBipartiteStore,
+                                  CrossJoinExecutor)
+from repro.core.index import DiskJoinIndex
+from repro.core.types import JoinConfig, JoinResult
 from repro.store.vector_store import FlatVectorStore
+
+# kept importable under their pre-refactor private names
+_CombinedBipartiteStore = CombinedBipartiteStore
+_CrossJoinExecutor = CrossJoinExecutor
+
+_deprecation_warned: set[str] = set()
+
+
+def _warn_deprecated(name: str) -> None:
+    if name in _deprecation_warned:
+        return
+    _deprecation_warned.add(name)
+    warnings.warn(
+        f"{name}() is deprecated: it rebuilds the bucketed layout on every "
+        f"call. Build a DiskJoinIndex once and use index.self_join / "
+        f"index.cross_join / index.query instead.",
+        DeprecationWarning, stacklevel=3)
 
 
 def similarity_self_join(store: FlatVectorStore, config: JoinConfig,
@@ -35,232 +54,66 @@ def similarity_self_join(store: FlatVectorStore, config: JoinConfig,
                          io_mode: str | None = None) -> JoinResult:
     """SSJ over a flat on-disk dataset under a memory budget.
 
+    Deprecated: equivalent to ``DiskJoinIndex.build(store, config,
+    workdir).self_join(attribute_mask=...)`` with the build cost folded
+    into ``timings`` — identical pair set, no reuse across calls.
+
     ``attribute_mask`` (paper §3 extension): (N,) bool predicate results;
     only pairs where both sides pass are verified/returned.
 
     ``io_mode`` overrides ``config.io_mode`` ("sync" | "prefetch") without
     rebuilding the config; the result pair set is identical either way.
     """
+    _warn_deprecated("similarity_self_join")
     if io_mode is not None:
         config = dataclasses.replace(config, io_mode=io_mode)
-    workdir = workdir or tempfile.mkdtemp(prefix="diskjoin_")
-    os.makedirs(workdir, exist_ok=True)
-    timings: dict[str, float] = {}
-
-    # disk-layout planning: when coalescing or striping is on, the write
-    # scan needs the join's node order *before* it lays out extents — the
-    # planner runs on the final bucket metadata, and its graph/order are
-    # reused below so the schedule matches the layout by construction
-    plan_cache: dict = {}
-
-    def layout_fn(meta: BucketMeta):
-        graph = build_bucket_graph(meta, config)
-        cap = resolve_bucket_capacity(config, meta.sizes)
-        cache_buckets = resolve_cache_buckets(config, cap, store.dim)
-        order = ordering.compute_node_order(graph, meta, config,
-                                            cache_buckets)
-        plan_cache["graph"], plan_cache["order"] = graph, order
-        return order
-
-    wants_layout = config.io_coalesce or config.io_devices > 1
-    t0 = time.perf_counter()
-    bstore, meta, bt = bucketize(store, os.path.join(workdir, "buckets"),
-                                 config,
-                                 layout_order_fn=(layout_fn if wants_layout
-                                                  else None))
-    timings["bucketing"] = time.perf_counter() - t0
-    timings.update({f"bucketing/{k}": v for k, v in bt.items()})
-
-    t0 = time.perf_counter()
-    graph = plan_cache.get("graph")
-    if graph is None:
-        graph = build_bucket_graph(meta, config)
-    timings["graph"] = time.perf_counter() - t0
-
-    executor = JoinExecutor(bstore, meta, config,
-                            attribute_mask=attribute_mask)
-    result = executor.run(graph, node_order=plan_cache.get("order"))
-    result.timings.update(timings)
-    # the layout pass did the graph build + ordering the executor reuses;
-    # attribute it to orchestration (total and sub-key both) so phase
-    # breakdowns stay comparable with non-layout configs
-    layout_s = result.timings.pop("bucketing/layout_plan", 0.0)
-    if layout_s:
-        result.timings["orchestration/layout_plan"] = layout_s
-    result.timings["bucketing"] -= layout_s
-    result.timings["orchestration"] = (result.timings.pop("plan")
-                                       + timings["graph"] + layout_s)
-    return result
+    index = DiskJoinIndex.build(store, config, workdir)
+    try:
+        result = index.self_join(attribute_mask=attribute_mask)
+        result.timings = index.merge_build_timings(result.timings)
+        return result
+    finally:
+        index.close()
 
 
 def similarity_cross_join(store_x: FlatVectorStore, store_y: FlatVectorStore,
                           config: JoinConfig, workdir: str | None = None,
                           reorder_larger: bool = True,
-                          io_mode: str | None = None) -> JoinResult:
+                          io_mode: str | None = None,
+                          attribute_mask=None) -> JoinResult:
     """Cross-join (§3 extension): bipartite graph over two bucketings.
+
+    Deprecated: equivalent to building one ``DiskJoinIndex`` per side and
+    calling ``index_x.cross_join(index_y, ...)``.
 
     ``reorder_larger=True`` is the paper's DiskJoin1 (stream the larger
     dataset in schedule order, cache the smaller); False is DiskJoin2.
     ``io_mode`` overrides ``config.io_mode`` as in ``similarity_self_join``.
+    ``attribute_mask``: (N_x + N_y,) bool over the combined id space (X
+    ids first, Y ids offset by ``store_x.num_vectors``) — pairs survive
+    only if both endpoints pass, exactly as in the self-join.
+
+    Result ids: X in [0, n_x), Y offset by n_x. The two sides get a
+    spatial-tour disk layout when coalescing/striping is on (the bipartite
+    schedule is unknowable before both sides are bucketized).
     """
+    _warn_deprecated("similarity_cross_join")
     if io_mode is not None:
         config = dataclasses.replace(config, io_mode=io_mode)
     workdir = workdir or tempfile.mkdtemp(prefix="diskjoin_x_")
     os.makedirs(workdir, exist_ok=True)
-
-    big_first = store_x.num_vectors >= store_y.num_vectors
-    if not reorder_larger:
-        big_first = not big_first
-    s_drive, s_cache = ((store_x, store_y) if big_first
-                        else (store_y, store_x))
-    drive_is_x = s_drive is store_x
-
-    cfg_drive = config
-    cfg_cache = config
-    # the bipartite schedule isn't known until both sides are bucketized,
-    # so exact schedule-order layout is impossible here; a per-side
-    # spatial tour of centers approximates it (the executor's Gorder over
-    # the bipartite graph follows metric locality), keeping coalescing
-    # and phase striping useful on cross-joins too
-    layout = ((lambda m: ordering.spatial_order(m.centers))
-              if (config.io_coalesce or config.io_devices > 1) else None)
-    t0 = time.perf_counter()
-    bs_d, meta_d, _ = bucketize(s_drive, os.path.join(workdir, "drive"),
-                                cfg_drive, layout_order_fn=layout)
-    bs_c, meta_c, _ = bucketize(s_cache, os.path.join(workdir, "cache"),
-                                cfg_cache, layout_order_fn=layout)
-    bucketing_s = time.perf_counter() - t0
-
-    # bipartite candidate graph: for each drive bucket, candidate cache
-    # buckets by center search + Eq.1 + probabilistic pruning
-    t0 = time.perf_counter()
-    index = make_center_index(meta_c.centers)
-    L = min(config.max_candidates, meta_c.num_buckets)
-    d2, cand = index.search(meta_d.centers, L)
-    dists = np.sqrt(np.maximum(d2, 0.0))
-    eps = float(config.epsilon)
-    dim = meta_d.centers.shape[1]
-    pairs_bg: list[tuple[int, int]] = []
-    for b in range(meta_d.num_buckets):
-        ids, dd = cand[b], dists[b]
-        ok = np.isfinite(dd)
-        ids, dd = ids[ok], dd[ok]
-        tri = dd - meta_d.radii[b] - meta_c.radii[ids] <= eps
-        ids, dd = ids[tri], dd[tri]
-        if config.prune and ids.size:
-            keep = prune_candidates(dd, float(meta_d.radii[b]) + eps, dim,
-                                    config.recall_target,
-                                    cand_radii=meta_c.radii[ids])
-            ids = ids[keep]
-        for j in ids:
-            pairs_bg.append((b, int(j)))
-    graph_s = time.perf_counter() - t0
-
-    # execute: drive buckets streamed in Gorder order; cache side managed by
-    # Belady. We reuse the self-join executor over a *combined* store view by
-    # offsetting cache-bucket ids. Result ids: X in [0, n_x), Y offset by n_x.
-    n_x = store_x.num_vectors
-    combined = _CombinedBipartiteStore(
-        bs_d, bs_c,
-        drive_id_offset=0 if drive_is_x else n_x,
-        cache_id_offset=n_x if drive_is_x else 0)
-    meta = BucketMeta(
-        centers=np.concatenate([meta_d.centers, meta_c.centers]),
-        radii=np.concatenate([meta_d.radii, meta_c.radii]),
-        sizes=np.concatenate([meta_d.sizes, meta_c.sizes]),
-    )
-    off = meta_d.num_buckets
-    edges = np.asarray([(i, off + j) for i, j in pairs_bg], dtype=np.int64)
-    if edges.size == 0:
-        edges = np.zeros((0, 2), dtype=np.int64)
-    graph = BucketGraph(num_nodes=meta.num_buckets, edges=edges)
-
-    executor = _CrossJoinExecutor(combined, meta, config)
-    result = executor.run(graph)
-    result.timings["bucketing"] = bucketing_s
-    result.timings["orchestration"] = result.timings.pop("plan") + graph_s
-    return result
-
-
-class _CombinedBipartiteStore:
-    """Unified bucket-id space over (drive ++ cache) bucketed stores.
-
-    Vector ids are tagged per side (X ids stay < n_x; Y ids offset by n_x)
-    so result pairs are unambiguous.
-    """
-
-    def __init__(self, drive, cache, drive_id_offset: int,
-                 cache_id_offset: int):
-        self.drive = drive
-        self.cache = cache
-        self.dim = drive.dim
-        self.off = drive.num_buckets
-        self._offs = (drive_id_offset, cache_id_offset)
-        self.stats = drive.stats  # JoinExecutor snapshots this; we override
-        self._live = (drive.stats, cache.stats)
-        # device surface: the two sides are distinct backing stores, so
-        # their device ids are disjoint; the prefetcher gets one queue per
-        # underlying device across both
-        self.num_devices = drive.num_devices + cache.num_devices
-
-    def device_of(self, b: int) -> int:
-        if b < self.off:
-            return self.drive.device_of(b)
-        return self.drive.num_devices + self.cache.device_of(b - self.off)
-
-    def contiguous_after(self, a: int, b: int) -> bool:
-        if a < self.off and b < self.off:
-            return self.drive.contiguous_after(a, b)
-        if a >= self.off and b >= self.off:
-            return self.cache.contiguous_after(a - self.off, b - self.off)
-        return False
-
-    def read_run_into(self, buckets, out_vecs, out_ids,
-                      pad_value: float = 0.0) -> list[int]:
-        if buckets[0] < self.off:
-            side, locs, off = (self.drive, list(buckets), self._offs[0])
-        else:
-            side = self.cache
-            locs = [b - self.off for b in buckets]
-            off = self._offs[1]
-        ns = side.read_run_into(locs, out_vecs, out_ids,
-                                pad_value=pad_value)
-        for oi, n in zip(out_ids, ns):
-            oi[:n] += off
-        return ns
-
-    def read_bucket(self, b: int):
-        if b < self.off:
-            vecs, ids = self.drive.read_bucket(b)
-            return vecs, ids + self._offs[0]
-        vecs, ids = self.cache.read_bucket(b - self.off)
-        return vecs, ids + self._offs[1]
-
-    def read_bucket_into(self, b: int, out_vecs, out_ids,
-                         pad_value: float = 0.0) -> int:
-        """Prefetcher hot path: delegate to the owning side, offset ids."""
-        if b < self.off:
-            side, local, off = self.drive, b, self._offs[0]
-        else:
-            side, local, off = self.cache, b - self.off, self._offs[1]
-        n = side.read_bucket_into(local, out_vecs, out_ids,
-                                  pad_value=pad_value)
-        out_ids[:n] += off
-        return n
-
-    def snapshot_stats(self) -> dict:
-        return self._live[0].merge(self._live[1]).snapshot()
-
-
-class _CrossJoinExecutor(JoinExecutor):
-    """Bipartite execution: intra-bucket self-joins disabled."""
-
-    intra_join = False
-
-    def run(self, graph) -> JoinResult:
-        res = super().run(graph)
-        pipeline = res.io_stats.get("pipeline")
-        res.io_stats = self.store.snapshot_stats()
-        if pipeline is not None:
-            res.io_stats["pipeline"] = pipeline
-        return res
+    index_x = DiskJoinIndex.build(store_x, config,
+                                  os.path.join(workdir, "x"),
+                                  layout="spatial")
+    index_y = DiskJoinIndex.build(store_y, config,
+                                  os.path.join(workdir, "y"),
+                                  layout="spatial")
+    try:
+        result = index_x.cross_join(index_y, reorder_larger=reorder_larger,
+                                    attribute_mask=attribute_mask)
+        result.timings = index_x.merge_build_timings(
+            index_y.merge_build_timings(result.timings))
+        return result
+    finally:
+        index_x.close()
+        index_y.close()

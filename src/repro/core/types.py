@@ -1,10 +1,32 @@
-"""Core datatypes for the DiskJoin engine."""
+"""Core datatypes for the DiskJoin engine.
+
+Configuration is split along the build/query boundary of the session API
+(``repro.core.index.DiskJoinIndex``):
+
+  * **build-time** parameters (``BuildConfig``, ``BUILD_TIME_FIELDS``)
+    shape the on-disk index — bucket count/capacity, padding, striping,
+    layout order. They are frozen into the index manifest by
+    ``DiskJoinIndex.build`` and can only change via a rebuild.
+  * **query-time** parameters (``QueryConfig``, ``QUERY_TIME_FIELDS``)
+    shape a single join/query — ε, λ, memory budget, eviction, io_mode,
+    prefetch knobs. They may vary per call against one build.
+
+``JoinConfig`` remains the flat union of both (the one-shot API), with
+``split_config``/``merge_config`` converting between the two views.
+"""
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional
 
 import numpy as np
+
+
+def _resolve_num_buckets(num_buckets: Optional[int], num_vectors: int) -> int:
+    if num_buckets is not None:
+        return max(2, min(num_buckets, num_vectors))
+    # paper Fig. 11: best at ~1‰ of dataset size
+    return max(2, min(num_vectors // 2, max(16, num_vectors // 1000)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,10 +116,95 @@ class JoinConfig:
                              f"got {self.io_stripe_by!r}")
 
     def resolve_num_buckets(self, num_vectors: int) -> int:
-        if self.num_buckets is not None:
-            return max(2, min(self.num_buckets, num_vectors))
-        # paper Fig. 11: best at ~1‰ of dataset size
-        return max(2, min(num_vectors // 2, max(16, num_vectors // 1000)))
+        return _resolve_num_buckets(self.num_buckets, num_vectors)
+
+
+# ---------------------------------------------------------------------------
+# build-time / query-time split (session API)
+# ---------------------------------------------------------------------------
+BUILD_TIME_FIELDS = frozenset({
+    "num_buckets", "bucket_capacity", "block_rows", "max_bucket_rows",
+    "pad_align", "seed", "io_devices", "io_stripe_by", "io_coalesce",
+})
+"""Parameters baked into the on-disk index (bucketization + layout +
+striping). ``io_coalesce`` is build-time because coalescing relies on the
+writer laying extents in schedule order and on chunked phase striping."""
+
+QUERY_TIME_FIELDS = frozenset(
+    f.name for f in dataclasses.fields(JoinConfig)) - BUILD_TIME_FIELDS
+"""Parameters a single join/query may vary against one build."""
+
+
+@dataclasses.dataclass(frozen=True)
+class BuildConfig:
+    """Build-time parameters: everything that shapes the on-disk index.
+
+    Changing any of these requires ``DiskJoinIndex.build`` to rewrite the
+    bucketed store; the session API rejects them as per-query overrides.
+    Field semantics match the identically-named ``JoinConfig`` attributes.
+    """
+
+    num_buckets: Optional[int] = None
+    bucket_capacity: Optional[int] = None
+    block_rows: int = 8192
+    max_bucket_rows: Optional[int] = None
+    pad_align: int = 128
+    seed: int = 0
+    io_devices: int = 1
+    io_stripe_by: str = "phase"
+    io_coalesce: bool = False
+
+    def __post_init__(self):
+        if self.io_devices < 1:
+            raise ValueError(f"io_devices must be >= 1, got {self.io_devices}")
+        if self.io_stripe_by not in ("phase", "hash"):
+            raise ValueError(f"io_stripe_by must be 'phase' or 'hash', "
+                             f"got {self.io_stripe_by!r}")
+
+    def resolve_num_buckets(self, num_vectors: int) -> int:
+        return _resolve_num_buckets(self.num_buckets, num_vectors)
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryConfig:
+    """Query-time parameters: everything a call may vary against one build.
+
+    Field semantics match the identically-named ``JoinConfig`` attributes.
+    """
+
+    epsilon: float
+    recall_target: float = 0.9
+    memory_budget_bytes: int = 64 * 1024 * 1024
+    eviction_policy: str = "belady"
+    reorder: bool = True
+    order_strategy: str = "gorder"
+    prune: bool = True
+    max_candidates: int = 64
+    use_pallas: bool = False
+    io_mode: str = "sync"
+    io_lookahead: int = 8
+    io_pool_slabs: Optional[int] = None
+    io_threads: int = 2
+    io_batch_reads: bool = False
+    emulate_read_latency_s: float = 0.0
+
+    def __post_init__(self):
+        if self.io_mode not in ("sync", "prefetch"):
+            raise ValueError(f"io_mode must be 'sync' or 'prefetch', "
+                             f"got {self.io_mode!r}")
+
+
+def split_config(config: JoinConfig) -> tuple[BuildConfig, QueryConfig]:
+    """Partition a flat ``JoinConfig`` into its (build, query) halves."""
+    d = dataclasses.asdict(config)
+    return (BuildConfig(**{k: d[k] for k in BUILD_TIME_FIELDS}),
+            QueryConfig(**{k: d[k] for k in QUERY_TIME_FIELDS}))
+
+
+def merge_config(build: BuildConfig, query: QueryConfig) -> JoinConfig:
+    """Recombine the two halves into the flat config the engine consumes."""
+    return JoinConfig(**dataclasses.asdict(build),
+                      **dataclasses.asdict(query))
 
 
 @dataclasses.dataclass
@@ -140,9 +247,48 @@ class BucketGraph:
         return adj
 
 
+TIMING_KEYS = ("bucketing", "graph", "orchestration", "execute",
+               "io_wait", "compute")
+"""The documented ``JoinResult.timings`` schema, identical for every join
+kind (self, cross, index session). Detail sub-phases appear under
+``"<phase>/<sub>"`` keys (e.g. ``bucketing/assign``,
+``orchestration/layout_plan``); consumers should treat unknown sub-keys as
+additive detail of their parent phase."""
+
+
+def finalize_timings(exec_timings: dict, graph_s: float,
+                     bucketing_s: float = 0.0,
+                     bucketing_sub: dict | None = None) -> dict:
+    """Shape raw executor timings into the one documented schema.
+
+    ``exec_timings`` is the executor's ``{plan, execute, io_wait, compute}``;
+    ``graph_s`` the bucket-graph build time; ``bucketing_s`` the bucketize
+    wall time (0 for index-session joins, where bucketization is amortized
+    across calls) with ``bucketing_sub`` its per-scan detail. A
+    ``layout_plan`` entry in the detail is re-attributed to orchestration —
+    the disk-layout pass runs graph build + ordering that the executor then
+    reuses, so phase fractions stay comparable across configurations.
+    """
+    sub = dict(bucketing_sub or {})
+    layout_s = sub.pop("layout_plan", 0.0)
+    out = dict(exec_timings)
+    out["bucketing"] = bucketing_s - layout_s
+    for k, v in sub.items():
+        out[f"bucketing/{k}"] = v
+    out["graph"] = graph_s
+    out["orchestration"] = out.pop("plan") + graph_s + layout_s
+    if layout_s:
+        out["orchestration/layout_plan"] = layout_s
+    return out
+
+
 @dataclasses.dataclass
 class JoinResult:
-    """Join output + execution telemetry."""
+    """Join output + execution telemetry.
+
+    ``timings`` follows the ``TIMING_KEYS`` schema for every join kind
+    (self-join, cross-join and the ``DiskJoinIndex`` session calls emit the
+    same top-level key set)."""
 
     pairs: np.ndarray                 # (P, 2) int64 original vector ids, a<b
     distances: np.ndarray             # (P,) float32
@@ -152,7 +298,7 @@ class JoinResult:
     cache_misses: int
     bucket_loads: int
     io_stats: dict
-    timings: dict                     # phase -> seconds
+    timings: dict                     # phase -> seconds (TIMING_KEYS schema)
 
     @property
     def cache_hit_rate(self) -> float:

@@ -70,16 +70,25 @@ class BufferPool:
                               self.num_slabs - len(self._free))
         return slot
 
-    def acquire(self, timeout: float | None = None) -> int:
+    def acquire(self, timeout: float | None = None,
+                cancelled=None) -> int:
         """Take a free slab (refcount 1). Blocks while the pool is empty.
 
-        ``acquires`` counts attempts (blocking and non-blocking alike)."""
+        ``acquires`` counts attempts (blocking and non-blocking alike).
+        ``cancelled`` (zero-arg callable) supports shared pools that outlive
+        any one consumer: a waiter polls it and aborts with ``RuntimeError``
+        when it returns True, instead of requiring the whole pool to close.
+        """
         with self._cond:
             self.acquires += 1
             if not self._free:
                 self.blocked_acquires += 1
             while not self._free and not self._closed:
-                if not self._cond.wait(timeout=timeout):
+                if cancelled is not None:
+                    if cancelled():
+                        raise RuntimeError("buffer pool acquire cancelled")
+                    self._cond.wait(timeout=0.05)
+                elif not self._cond.wait(timeout=timeout):
                     raise TimeoutError("buffer pool exhausted "
                                        f"({self.num_slabs} slabs, all pinned)")
             if self._closed:
@@ -116,6 +125,13 @@ class BufferPool:
             if self._refs[slot] == 0:
                 self._free.append(slot)
                 self._cond.notify_all()
+
+    def kick(self) -> None:
+        """Wake blocked acquirers so they re-check their ``cancelled``
+        callback — used when a consumer of a *shared* pool shuts down
+        without closing the pool for everyone else."""
+        with self._cond:
+            self._cond.notify_all()
 
     def close(self) -> None:
         """Unblock any waiter; further acquires fail."""

@@ -39,6 +39,12 @@ class PipelineStats:
     batched_reads: int = 0        # reads that rode in a batched submission
     coalesced_reads: int = 0      # merged sequential reads performed
     coalesced_buckets: int = 0    # buckets served by coalesced reads
+    # online point-query serving (DiskJoinIndex.query — shares this stats
+    # object with the batch joins of the same index session)
+    queries: int = 0              # point queries answered
+    query_reads: int = 0          # bucket reads issued for queries (pooled)
+    query_warm_hits: int = 0      # query candidates served from warm slabs
+    query_fallback_reads: int = 0  # unpooled reads (pool fully contended)
     device_loads: list = dataclasses.field(default_factory=list)
     device_depth_max: list = dataclasses.field(default_factory=list)
 
@@ -75,6 +81,13 @@ class PipelineStats:
             return 1.0
         return max(0.0, self.read_s - self.io_wait_s) / self.read_s
 
+    # configuration/high-water fields: a point-in-time reading, not an
+    # accumulating counter — reported as-is by snapshot_since
+    GAUGE_FIELDS = frozenset({
+        "pool_slabs", "lookahead", "num_devices", "max_queue_depth",
+        "max_slabs_in_use", "blocked_acquires", "device_depth_max",
+    })
+
     def snapshot(self) -> dict:
         with self._lock:
             d = {}
@@ -85,3 +98,26 @@ class PipelineStats:
             max(0.0, d["read_s"] - d["io_wait_s"]) / d["read_s"]
             if d["read_s"] > 0 else 1.0)
         return d
+
+    def snapshot_since(self, base: dict) -> dict:
+        """Per-run view on a long-lived (session) stats object: additive
+        counters are diffed against ``base`` (a prior ``snapshot()``);
+        gauges report their current reading. Activity from concurrent
+        consumers of the same session (e.g. online queries during a batch
+        join) lands in the window it happened in."""
+        cur = self.snapshot()
+        out = {}
+        for k, v in cur.items():
+            b = base.get(k)
+            if k in self.GAUGE_FIELDS or k == "overlap_efficiency" \
+                    or b is None:
+                out[k] = v
+            elif isinstance(v, list):
+                out[k] = ([x - y for x, y in zip(v, b)]
+                          if len(v) == len(b) else v)
+            else:
+                out[k] = v - b
+        out["overlap_efficiency"] = (
+            max(0.0, out["read_s"] - out["io_wait_s"]) / out["read_s"]
+            if out["read_s"] > 0 else 1.0)
+        return out

@@ -52,9 +52,14 @@ class SchedulePrefetcher:
                  stats: PipelineStats | None = None,
                  pad_value: float = 0.0,
                  batch_reads: bool = False, coalesce: bool = False,
-                 max_batch: int = MAX_BATCH):
+                 max_batch: int = MAX_BATCH, close_pool: bool = True):
+        """``close_pool=False`` marks ``pool`` as shared (owned by a
+        ``DiskJoinIndex`` session, outliving this prefetcher): ``close()``
+        then only wakes/cancels this prefetcher's waiters instead of
+        closing the pool for every other consumer."""
         self.store = store
         self.pool = pool
+        self.close_pool = bool(close_pool)
         self.lookahead = max(1, int(lookahead))
         self.stats = stats if stats is not None else PipelineStats()
         self.pad_value = pad_value
@@ -96,7 +101,11 @@ class SchedulePrefetcher:
                         self._cond.wait()
                     if self._closed:
                         return
-                slot = self.pool.acquire()  # backpressure: blocks when full
+                # backpressure: blocks when full; on a shared pool the wait
+                # is cancellable so close() never strands this thread
+                slot = self.pool.acquire(
+                    cancelled=None if self.close_pool
+                    else (lambda: self._closed))
                 dev = self._device_of(loads[k])
                 group = [(k, loads[k], slot)]
                 if self.batch_reads:
@@ -225,7 +234,10 @@ class SchedulePrefetcher:
         with self._cond:
             self._closed = True
             self._cond.notify_all()
-        self.pool.close()
+        if self.close_pool:
+            self.pool.close()
+        else:
+            self.pool.kick()  # shared pool stays open for other consumers
         self._issuer.join(timeout=10)
         for w in self._workers:
             w.shutdown(wait=True)
@@ -249,19 +261,33 @@ class PrefetchedBucketCache:
                  lookahead: int = 8, pool_slabs: int | None = None,
                  num_threads: int = 2, pad_value: float = 0.0,
                  batch_reads: bool = False, coalesce: bool = False,
-                 stats: PipelineStats | None = None):
+                 stats: PipelineStats | None = None,
+                 pool: BufferPool | None = None):
+        """``pool``: an externally-owned (session) pool to read into —
+        slab shape must match (``capacity_rows`` × ``store.dim``); it is
+        left open by ``close()``. Without it a private pool of
+        ``pool_slabs`` slabs is created and closed with the cache."""
         self.stats = stats if stats is not None else PipelineStats()
         self.capacity_rows = int(capacity_rows)
         if pool_slabs is None:
             raise ValueError("pool_slabs must be sized by the caller "
                              "(>= cache capacity + 1 for liveness)")
-        self.pool = BufferPool(pool_slabs, capacity_rows, store.dim)
-        self.stats.pool_slabs = pool_slabs
+        self._owns_pool = pool is None
+        if pool is None:
+            pool = BufferPool(pool_slabs, capacity_rows, store.dim)
+        elif (pool.capacity_rows != int(capacity_rows)
+              or pool.dim != store.dim):
+            raise ValueError(
+                f"shared pool slabs are ({pool.capacity_rows}, {pool.dim}), "
+                f"need ({capacity_rows}, {store.dim})")
+        self.pool = pool
+        self.stats.pool_slabs = pool.num_slabs
         self.stats.lookahead = int(lookahead)
         self.prefetcher = SchedulePrefetcher(
             store, actions, self.pool, lookahead=lookahead,
             num_threads=num_threads, stats=self.stats, pad_value=pad_value,
-            batch_reads=batch_reads, coalesce=coalesce)
+            batch_reads=batch_reads, coalesce=coalesce,
+            close_pool=self._owns_pool)
         self._slots: dict[int, tuple[int, int]] = {}  # bucket -> (slot, rows)
         self.loads = 0
 
@@ -304,4 +330,10 @@ class PrefetchedBucketCache:
     def close(self) -> None:
         self.stats.max_slabs_in_use = self.pool.max_in_use
         self.stats.blocked_acquires = self.pool.blocked_acquires
+        # drop the residency pins of buckets still resident at the end of
+        # the schedule — on a shared (session) pool the slabs must return
+        # to the free list for the next join/query, not leak
+        for slot, _ in self._slots.values():
+            self.pool.unpin(slot)
+        self._slots.clear()
         self.prefetcher.close()

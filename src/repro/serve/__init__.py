@@ -1,4 +1,11 @@
-"""Serving: batched continuous-decode engine."""
-from repro.serve.engine import Request, ServeEngine
+"""Serving: batched continuous-decode engine + online vector queries.
 
-__all__ = ["Request", "ServeEngine"]
+``ServeEngine`` — wave-batched LM decode serving.
+``VectorQueryService`` — ε-range point lookups over a ``DiskJoinIndex``
+session, sharing the index's BufferPool/prefetcher and PipelineStats with
+batch joins (ROADMAP "serving integration").
+"""
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.query_service import VectorQueryService
+
+__all__ = ["Request", "ServeEngine", "VectorQueryService"]

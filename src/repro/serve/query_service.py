@@ -1,0 +1,90 @@
+"""Online ε-range vector query serving (ROADMAP: serving integration).
+
+``VectorQueryService`` is a thin facade over a ``DiskJoinIndex`` session:
+point queries route their candidate-bucket reads through the index's
+shared ``BufferPool``/prefetcher and verify path, so online traffic and
+any concurrently-running batch joins share one slab memory budget and one
+``PipelineStats`` telemetry surface. The service itself only adds request
+accounting (count + latency percentiles) and optional top-k truncation.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+
+import numpy as np
+
+from repro.core.index import DiskJoinIndex
+
+
+class VectorQueryService:
+    """Serve ε-range point lookups from a built DiskJoin index.
+
+    ``epsilon`` is the default threshold (falls back to the index's
+    query-time default); per-request ``epsilon=``/``io_mode=`` overrides
+    pass straight through to ``DiskJoinIndex.query_batch``.
+    """
+
+    def __init__(self, index: DiskJoinIndex, *,
+                 epsilon: float | None = None,
+                 latency_window: int = 4096):
+        self.index = index
+        if epsilon is None:
+            if index.query_defaults is None:
+                raise ValueError(
+                    "epsilon required: the index has no query-time defaults")
+            epsilon = index.query_defaults.epsilon
+        self.epsilon = float(epsilon)
+        self.requests = 0
+        self._latencies: deque[float] = deque(maxlen=int(latency_window))
+        self._lock = threading.Lock()
+
+    # -- serving --------------------------------------------------------------
+    def query(self, q: np.ndarray, epsilon: float | None = None,
+              k: int | None = None,
+              **overrides) -> tuple[np.ndarray, np.ndarray]:
+        """One ε-range lookup → (ids, distances), nearest first.
+
+        ``k`` truncates to the k nearest matches inside the ε ball."""
+        return self.query_batch(np.asarray(q, np.float32)[None, :],
+                                epsilon, k=k, **overrides)[0]
+
+    def query_batch(self, Q: np.ndarray, epsilon: float | None = None,
+                    k: int | None = None, **overrides
+                    ) -> list[tuple[np.ndarray, np.ndarray]]:
+        eps = self.epsilon if epsilon is None else float(epsilon)
+        t0 = time.perf_counter()
+        raw = self.index.query_batch(Q, eps, **overrides)
+        dt = time.perf_counter() - t0
+        out = []
+        for ids, dists in raw:
+            order = np.argsort(dists, kind="stable")
+            if k is not None:
+                order = order[:int(k)]
+            out.append((ids[order], dists[order]))
+        with self._lock:
+            self.requests += len(out)
+            # one request batch = one service round trip; attribute the
+            # wall time evenly so percentiles stay per-request meaningful
+            self._latencies.extend([dt / max(1, len(out))] * len(out))
+        return out
+
+    # -- telemetry ------------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Service counters + the index session's PipelineStats (one
+        surface for online reads and batch-join loads)."""
+        with self._lock:
+            lats = np.asarray(self._latencies, np.float64)
+            requests = self.requests
+        d = {
+            "requests": requests,
+            "latency_p50_ms": (float(np.percentile(lats, 50)) * 1e3
+                               if lats.size else 0.0),
+            "latency_p95_ms": (float(np.percentile(lats, 95)) * 1e3
+                               if lats.size else 0.0),
+            "latency_mean_ms": (float(lats.mean()) * 1e3
+                                if lats.size else 0.0),
+        }
+        d["pipeline"] = self.index.pipeline_snapshot()
+        return d

@@ -1,0 +1,350 @@
+"""DiskJoinIndex session API: build→open manifest roundtrip, ε re-query
+parity with one bucketization, online point-query recall, shared
+pool/stats surface, config split validation, deprecation shims."""
+import dataclasses
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (BUILD_TIME_FIELDS, QUERY_TIME_FIELDS, TIMING_KEYS,
+                        BuildConfig, DiskJoinIndex, JoinConfig, QueryConfig,
+                        merge_config, recall, similarity_cross_join,
+                        similarity_self_join, split_config)
+from repro.data import brute_force_pairs, clustered_vectors
+from repro.store.striped_store import StripedBucketedVectorStore
+from repro.store.vector_store import FlatVectorStore
+
+
+def _pair_keys(pairs):
+    return set(map(tuple, np.asarray(pairs).tolist()))
+
+
+@pytest.fixture(scope="module")
+def data():
+    x = clustered_vectors(2500, 24, seed=9)
+    return x, 0.35
+
+
+@pytest.fixture()
+def flat_store(tmp_path):
+    def make(x, name="x.bin"):
+        return FlatVectorStore.from_array(str(tmp_path / name), x)
+    return make
+
+
+def _cfg(x, eps, **kw):
+    base = dict(epsilon=eps, recall_target=0.9, pad_align=64,
+                num_buckets=20, memory_budget_bytes=1 << 20)
+    base.update(kw)
+    return JoinConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# config split: the build/query partition is total and rejects crossover
+# ---------------------------------------------------------------------------
+class TestConfigSplit:
+    def test_partition_is_total_and_disjoint(self):
+        all_fields = {f.name for f in dataclasses.fields(JoinConfig)}
+        assert BUILD_TIME_FIELDS | QUERY_TIME_FIELDS == all_fields
+        assert not BUILD_TIME_FIELDS & QUERY_TIME_FIELDS
+        assert {f.name for f in dataclasses.fields(BuildConfig)} \
+            == BUILD_TIME_FIELDS
+        assert {f.name for f in dataclasses.fields(QueryConfig)} \
+            == QUERY_TIME_FIELDS
+
+    def test_split_merge_roundtrip(self):
+        cfg = JoinConfig(epsilon=0.2, num_buckets=7, io_devices=2,
+                         io_coalesce=True, io_mode="prefetch", pad_align=32)
+        assert merge_config(*split_config(cfg)) == cfg
+
+    def test_defaults_agree_with_joinconfig(self):
+        b, q = split_config(JoinConfig(epsilon=0.5))
+        assert b == BuildConfig()
+        assert q == QueryConfig(epsilon=0.5)
+
+    def test_build_time_override_rejected(self, data, flat_store, tmp_path):
+        x, eps = data
+        index = DiskJoinIndex.build(flat_store(x), _cfg(x, eps),
+                                    str(tmp_path / "idx"))
+        with pytest.raises(ValueError, match="build-time"):
+            index.self_join(num_buckets=5)
+        with pytest.raises(ValueError, match="build-time"):
+            index.query(x[0], eps, io_devices=2)
+        with pytest.raises(TypeError, match="unknown"):
+            index.self_join(bogus=1)
+        index.close()
+
+
+# ---------------------------------------------------------------------------
+# build → open manifest roundtrip (striped and unstriped)
+# ---------------------------------------------------------------------------
+class TestBuildOpen:
+    def test_roundtrip_unstriped(self, data, flat_store, tmp_path):
+        x, eps = data
+        wd = str(tmp_path / "idx")
+        built = DiskJoinIndex.build(flat_store(x), _cfg(x, eps), wd)
+        r_built = built.self_join()
+        opened = DiskJoinIndex.open(wd)
+        # no dataset rescan: metadata comes back identical from disk
+        np.testing.assert_array_equal(opened.meta.centers,
+                                      built.meta.centers)
+        np.testing.assert_array_equal(opened.meta.sizes, built.meta.sizes)
+        assert opened.build_config == built.build_config
+        assert opened.query_defaults == built.query_defaults
+        r_opened = opened.self_join()
+        assert _pair_keys(r_opened.pairs) == _pair_keys(r_built.pairs)
+        # reattach performed zero writes
+        assert opened.store.stats.write_ops == 0
+        built.close()
+        opened.close()
+
+    def test_roundtrip_striped(self, data, flat_store, tmp_path):
+        x, eps = data
+        wd = str(tmp_path / "idx_striped")
+        cfg = _cfg(x, eps, io_devices=3, io_coalesce=True,
+                   io_batch_reads=True, io_mode="prefetch", io_lookahead=12)
+        built = DiskJoinIndex.build(flat_store(x), cfg, wd)
+        r_built = built.self_join()
+        opened = DiskJoinIndex.open(wd)
+        assert isinstance(opened.store, StripedBucketedVectorStore)
+        assert opened.store.num_devices == built.store.num_devices
+        r_opened = opened.self_join()
+        assert _pair_keys(r_opened.pairs) == _pair_keys(r_built.pairs)
+        p = r_opened.io_stats["pipeline"]
+        assert p["num_devices"] == opened.store.num_devices
+        built.close()
+        opened.close()
+
+    def test_open_validates_build_half(self, data, flat_store, tmp_path):
+        x, eps = data
+        wd = str(tmp_path / "idx_v")
+        DiskJoinIndex.build(flat_store(x), _cfg(x, eps), wd).close()
+        with pytest.raises(ValueError, match="build-time parameters"):
+            DiskJoinIndex.open(wd, _cfg(x, eps, num_buckets=99))
+        # query-half changes are fine
+        opened = DiskJoinIndex.open(wd, _cfg(x, eps * 0.5))
+        assert opened.query_defaults.epsilon == pytest.approx(eps * 0.5)
+        opened.close()
+
+
+# ---------------------------------------------------------------------------
+# ε re-query: one bucketization, many thresholds (acceptance criterion)
+# ---------------------------------------------------------------------------
+class TestEpsilonSweep:
+    def test_one_build_three_epsilons_matches_one_shot(self, data,
+                                                       flat_store,
+                                                       tmp_path):
+        x, eps = data
+        cfg = _cfg(x, eps)
+        index = DiskJoinIndex.build(flat_store(x), cfg,
+                                    str(tmp_path / "idx"))
+        writes_after_build = index.store.stats.write_ops
+        assert writes_after_build > 0
+        sweeps = (eps, eps * 0.7, eps * 1.2)
+        for i, e in enumerate(sweeps):
+            r_idx = index.self_join(epsilon=e)
+            # exactly ONE bucketization: no further store writes, ever
+            assert index.store.stats.write_ops == writes_after_build
+            one_shot = similarity_self_join(
+                flat_store(x, f"x{i}.bin"),
+                dataclasses.replace(cfg, epsilon=e),
+                workdir=str(tmp_path / f"os{i}"))
+            assert _pair_keys(r_idx.pairs) == _pair_keys(one_shot.pairs)
+        index.close()
+
+    def test_timings_schema_uniform_across_join_kinds(self, data,
+                                                      flat_store,
+                                                      tmp_path):
+        x, eps = data
+        y = clustered_vectors(1200, 24, seed=11)
+        ix = DiskJoinIndex.build(flat_store(x), _cfg(x, eps),
+                                 str(tmp_path / "ix"))
+        iy = DiskJoinIndex.build(flat_store(y, "y.bin"), _cfg(y, eps),
+                                 str(tmp_path / "iy"))
+        t_self = ix.self_join().timings
+        t_cross = ix.cross_join(iy).timings
+        top = lambda t: {k for k in t if "/" not in k}  # noqa: E731
+        assert top(t_self) == set(TIMING_KEYS)
+        assert top(t_cross) == set(TIMING_KEYS)
+        ix.close()
+        iy.close()
+
+
+# ---------------------------------------------------------------------------
+# online point queries
+# ---------------------------------------------------------------------------
+class TestPointQuery:
+    def test_query_recall_and_precision_vs_brute_force(self, data,
+                                                       flat_store,
+                                                       tmp_path):
+        x, eps = data
+        index = DiskJoinIndex.build(flat_store(x),
+                                    _cfg(x, eps, recall_target=0.95),
+                                    str(tmp_path / "idx"))
+        rng = np.random.default_rng(0)
+        qids = rng.choice(x.shape[0], 40, replace=False)
+        got_total = truth_total = hit_total = 0
+        for qi in qids:
+            ids, dists = index.query(x[qi], eps)
+            d_true = np.linalg.norm(x - x[qi], axis=1)
+            truth = set(np.flatnonzero(d_true <= eps).tolist())
+            got = set(int(i) for i in ids)
+            assert got <= truth  # perfect precision (exact distances)
+            np.testing.assert_allclose(dists, d_true[ids], atol=1e-4)
+            got_total += len(got)
+            truth_total += len(truth)
+            hit_total += len(got & truth)
+        assert truth_total > 0
+        assert hit_total / truth_total >= 0.9  # λ=0.95 with slack
+        index.close()
+
+    def test_query_batch_matches_single_queries(self, data, flat_store,
+                                                tmp_path):
+        x, eps = data
+        index = DiskJoinIndex.build(flat_store(x), _cfg(x, eps),
+                                    str(tmp_path / "idx"))
+        Q = x[:8] + 0.01
+        batch = index.query_batch(Q, eps)
+        for qi in range(Q.shape[0]):
+            ids, dists = index.query(Q[qi], eps)
+            assert set(ids.tolist()) == set(batch[qi][0].tolist())
+        index.close()
+
+    def test_queries_share_pool_and_stats_with_batch_joins(self, data,
+                                                           flat_store,
+                                                           tmp_path):
+        """Acceptance: query reads ride the shared BufferPool and land in
+        the SAME PipelineStats snapshot as batch-join loads."""
+        x, eps = data
+        index = DiskJoinIndex.build(flat_store(x),
+                                    _cfg(x, eps, io_mode="prefetch"),
+                                    str(tmp_path / "idx"))
+        r = index.self_join()          # batch join: loads > 0
+        assert r.bucket_loads > 0
+        index.query(x[3], eps)         # online lookup, same session
+        index.query(x[3], eps)         # repeat: warm slab hits
+        snap = index.pipeline_snapshot()
+        assert snap["loads"] >= r.bucket_loads      # join traffic
+        assert snap["query_reads"] > 0              # pooled query reads
+        assert snap["query_warm_hits"] > 0          # warm-cache reuse
+        assert snap["queries"] == 2
+        # the warm cache holds pool slabs between queries
+        assert len(index.warm_buckets()) > 0
+        index.close()
+
+    def test_concurrent_join_and_queries_one_pool(self, data, flat_store,
+                                                  tmp_path):
+        """A batch join and online queries run concurrently against one
+        pool without deadlock; results of both stay correct."""
+        x, eps = data
+        index = DiskJoinIndex.build(flat_store(x),
+                                    _cfg(x, eps, io_mode="prefetch",
+                                         emulate_read_latency_s=2e-4),
+                                    str(tmp_path / "idx"))
+        ref = index.self_join()
+        out = {}
+
+        def joiner():
+            out["res"] = index.self_join()
+
+        t = threading.Thread(target=joiner)
+        t.start()
+        q_results = []
+        while t.is_alive():
+            q_results.append(index.query(x[11], eps))
+        t.join(timeout=60)
+        assert not t.is_alive()
+        assert _pair_keys(out["res"].pairs) == _pair_keys(ref.pairs)
+        expected = set(np.flatnonzero(
+            np.linalg.norm(x - x[11], axis=1) <= eps).tolist())
+        for ids, _ in q_results:
+            assert set(ids.tolist()) <= expected
+        index.close()
+
+
+# ---------------------------------------------------------------------------
+# serving facade
+# ---------------------------------------------------------------------------
+class TestVectorQueryService:
+    def test_sorted_topk_and_snapshot(self, data, flat_store, tmp_path):
+        from repro.serve import VectorQueryService
+        x, eps = data
+        index = DiskJoinIndex.build(flat_store(x), _cfg(x, eps),
+                                    str(tmp_path / "idx"))
+        svc = VectorQueryService(index)
+        ids, dists = svc.query(x[2], k=3)
+        assert len(ids) <= 3
+        assert np.all(np.diff(dists) >= 0)      # nearest first
+        assert int(ids[0]) == 2                 # itself at distance 0
+        snap = svc.snapshot()
+        assert snap["requests"] == 1
+        assert snap["pipeline"]["queries"] == 1
+        index.close()
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims
+# ---------------------------------------------------------------------------
+class TestDeprecationShims:
+    def test_self_join_wrapper_warns_once_and_matches_index(
+            self, data, flat_store, tmp_path):
+        from repro.core import join as join_mod
+        x, eps = data
+        cfg = _cfg(x, eps)
+        join_mod._deprecation_warned.clear()
+        with pytest.deprecated_call():
+            r_wrap = similarity_self_join(flat_store(x), cfg,
+                                          workdir=str(tmp_path / "w"))
+        # second call: silent (once per process)
+        import warnings as _w
+        with _w.catch_warnings(record=True) as rec:
+            _w.simplefilter("always")
+            similarity_self_join(flat_store(x, "x2.bin"), cfg,
+                                 workdir=str(tmp_path / "w2"))
+        assert not any(issubclass(i.category, DeprecationWarning)
+                       for i in rec)
+        index = DiskJoinIndex.build(flat_store(x, "x3.bin"), cfg,
+                                    str(tmp_path / "idx"))
+        r_idx = index.self_join()
+        assert _pair_keys(r_wrap.pairs) == _pair_keys(r_idx.pairs)
+        index.close()
+
+    def test_cross_join_wrapper_warns_and_threads_attribute_mask(
+            self, data, flat_store, tmp_path):
+        from repro.core import join as join_mod
+        x, eps = data
+        rng = np.random.default_rng(12)
+        y = (x[:1000] + rng.normal(scale=0.03, size=(1000, 24))
+             ).astype(np.float32)
+        mask = np.ones(x.shape[0] + y.shape[0], bool)
+        mask[::3] = False
+        cfg = _cfg(x, eps)
+        join_mod._deprecation_warned.clear()
+        with pytest.deprecated_call():
+            r_wrap = similarity_cross_join(
+                flat_store(x), flat_store(y, "y.bin"), cfg,
+                workdir=str(tmp_path / "w"), attribute_mask=mask)
+        assert r_wrap.pairs.shape[0] > 0
+        assert mask[r_wrap.pairs].all()   # satellite: mask now threads
+        ix = DiskJoinIndex.build(flat_store(x, "x2.bin"), cfg,
+                                 str(tmp_path / "ix"), layout="spatial")
+        iy = DiskJoinIndex.build(flat_store(y, "y2.bin"), cfg,
+                                 str(tmp_path / "iy"), layout="spatial")
+        r_idx = ix.cross_join(iy, attribute_mask=mask)
+        assert _pair_keys(r_wrap.pairs) == _pair_keys(r_idx.pairs)
+        with pytest.raises(ValueError, match="combined id space"):
+            ix.cross_join(iy, attribute_mask=np.ones(7, bool))
+        ix.close()
+        iy.close()
+
+    def test_self_join_full_pipeline_recall(self, data, flat_store,
+                                            tmp_path):
+        """The index path preserves the paper's end-to-end quality."""
+        x, eps = data
+        truth = brute_force_pairs(x, eps)
+        index = DiskJoinIndex.build(flat_store(x), _cfg(x, eps),
+                                    str(tmp_path / "idx"))
+        r = index.self_join()
+        assert recall(r.pairs, truth) >= 0.88
+        index.close()
