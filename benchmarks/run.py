@@ -13,8 +13,8 @@ from benchmarks import (fig7_baselines, fig8_recall, fig9_memory,
                         fig10_threshold, fig11_buckets, fig12_breakdown,
                         fig13_crossjoin, fig14_fragmentation, fig15_io,
                         fig17_ablation, fig18_pruning, fig19_pipeline,
-                        fig20_striping, fig21_online, kernel_roofline,
-                        randomness)
+                        fig20_striping, fig21_online, fig22_scheduler,
+                        kernel_roofline, randomness)
 
 MODULES = [
     ("fig7_baselines", fig7_baselines),
@@ -31,6 +31,7 @@ MODULES = [
     ("fig19_pipeline", fig19_pipeline),
     ("fig20_striping", fig20_striping),
     ("fig21_online", fig21_online),
+    ("fig22_scheduler", fig22_scheduler),
     ("randomness", randomness),
     ("kernel_roofline", kernel_roofline),
 ]

@@ -23,6 +23,13 @@ queries share a single slab memory budget and a single telemetry surface
 (the ROADMAP "serving integration" item — ``repro.serve`` wraps ``query``
 in a thin ``VectorQueryService``).
 
+The online path is split into a plan phase (``plan_probes`` — candidate
+buckets from in-memory metadata, no I/O) and an execute phase
+(``execute_probes`` — one read per distinct bucket, fanned out to every
+member query's verify), so a wave scheduler
+(``repro.serve.QueryScheduler``) can union many concurrent requests'
+probe sets and pay each hot bucket's read once.
+
 Configuration is split at the build/query boundary (``repro.core.types``):
 build-time parameters are frozen in the manifest and rejected as per-call
 overrides, so a query can never silently invalidate the on-disk layout.
@@ -83,6 +90,7 @@ class DiskJoinIndex:
         self._pool: BufferPool | None = None
         self._pool_lock = threading.Lock()
         self._center_index = None
+        self._center_lock = threading.Lock()
         self._graph_cache: dict = {}
         self._order_cache: dict = {}
         # warm point-query cache: bucket -> (pool slot, rows); each entry
@@ -414,6 +422,20 @@ class DiskJoinIndex:
             self._joins_active -= 1
 
     # -- online point queries -------------------------------------------------
+    def _validate_queries(self, Q: np.ndarray) -> np.ndarray:
+        """Normalize query input to a contiguous (Q, dim) float32 array,
+        rejecting wrong dimensionality and non-finite values up front —
+        NaN/Inf would otherwise flow through the verify kernel as garbage
+        distances instead of an error."""
+        Q = np.ascontiguousarray(np.atleast_2d(np.asarray(Q, np.float32)))
+        if Q.ndim != 2 or Q.shape[1] != self.dim:
+            raise ValueError(
+                f"query shape {Q.shape} incompatible with index "
+                f"({self.dim}-dimensional vectors expected)")
+        if not np.isfinite(Q).all():
+            raise ValueError("query contains NaN/Inf values")
+        return Q
+
     def query(self, q: np.ndarray, epsilon: float | None = None,
               **overrides) -> tuple[np.ndarray, np.ndarray]:
         """ε-range lookup for one query vector → (ids, distances)."""
@@ -421,29 +443,69 @@ class DiskJoinIndex:
                                epsilon, **overrides)
         return out[0]
 
+    def plan_probes(self, Q: np.ndarray, epsilon: float | None = None,
+                    **overrides) -> list[np.ndarray]:
+        """Plan phase of ``query_batch``: per-query candidate-bucket ids.
+
+        Pure in-memory metadata work (center index + point triangle
+        inequality + Eq. 3 pruning) — no disk reads. A wave scheduler
+        (``repro.serve.QueryScheduler``) plans a whole wave first, unions
+        the returned sets, and pays ONE read per distinct bucket in
+        ``execute_probes`` instead of one per (query, bucket) reference.
+        """
+        if epsilon is not None:
+            overrides["epsilon"] = epsilon
+        cfg = self._resolve(overrides)
+        Q = self._validate_queries(Q)
+        return self._candidate_buckets(Q, cfg)
+
+    def execute_probes(self, Q: np.ndarray, per_q: list[np.ndarray],
+                       epsilon: float | None = None, **overrides
+                       ) -> list[tuple[np.ndarray, np.ndarray]]:
+        """Execute phase of ``query_batch``: read + verify planned probes.
+
+        ``per_q`` is ``plan_probes``' output for the same ``Q`` (and the
+        same query-time parameters). Each *distinct* bucket in the union
+        of ``per_q`` is read once — through the session pool, warm cache
+        and (``io_mode="prefetch"``) the batching/coalescing prefetcher —
+        and its resident slab is fanned out to every member query's
+        verify. Returns one (ids, distances) pair per query, unsorted.
+        """
+        if epsilon is not None:
+            overrides["epsilon"] = epsilon
+        cfg = self._resolve(overrides)
+        Q = self._validate_queries(Q)
+        if len(per_q) != Q.shape[0]:
+            raise ValueError(f"probe plan covers {len(per_q)} queries, "
+                             f"got {Q.shape[0]} query vectors")
+        return self._execute_probes(Q, per_q, cfg)
+
     def query_batch(self, Q: np.ndarray, epsilon: float | None = None,
                     **overrides) -> list[tuple[np.ndarray, np.ndarray]]:
         """ε-range lookups for a batch of query vectors.
 
         Routing (the ROADMAP serving item): candidate buckets come from
-        the center index + point triangle inequality + Eq. 3 pruning;
-        their reads go through the session's shared ``BufferPool`` (and,
-        in ``io_mode="prefetch"``, a schedule prefetcher), land in the
-        same ``PipelineStats`` as batch joins, and recently-read buckets
-        stay warm in pool slabs for subsequent queries. Returns one
-        (ids, distances) pair per query, unsorted, with exact distances
-        (perfect precision; recall governed by ``recall_target``).
+        the center index + point triangle inequality + Eq. 3 pruning
+        (``plan_probes``); their reads go through the session's shared
+        ``BufferPool`` (and, in ``io_mode="prefetch"``, a schedule
+        prefetcher), land in the same ``PipelineStats`` as batch joins,
+        and recently-read buckets stay warm in pool slabs for subsequent
+        queries (``execute_probes``). Returns one (ids, distances) pair
+        per query, unsorted, with exact distances (perfect precision;
+        recall governed by ``recall_target``).
         """
         if epsilon is not None:
             overrides["epsilon"] = epsilon
         cfg = self._resolve(overrides)
-        Q = np.ascontiguousarray(np.atleast_2d(np.asarray(Q, np.float32)))
-        if Q.shape[1] != self.dim:
-            raise ValueError(f"query dim {Q.shape[1]} != index dim {self.dim}")
-        eps = float(cfg.epsilon)
-
+        Q = self._validate_queries(Q)
         per_q = self._candidate_buckets(Q, cfg)
-        # bucket -> probing query rows, in first-probe order
+        return self._execute_probes(Q, per_q, cfg)
+
+    def _execute_probes(self, Q: np.ndarray, per_q: list[np.ndarray],
+                        cfg: JoinConfig
+                        ) -> list[tuple[np.ndarray, np.ndarray]]:
+        eps = float(cfg.epsilon)
+        # bucket -> probing query rows; each distinct bucket is read once
         probe: dict[int, list[int]] = {}
         for qi, ids in enumerate(per_q):
             for b in ids:
@@ -469,7 +531,8 @@ class DiskJoinIndex:
                         np.sqrt(np.maximum(d2[row][m], 0.0))
                         .astype(np.float32))
 
-        self._read_and_verify(list(probe), cfg, verify)
+        self._read_and_verify(self._sorted_by_layout(list(probe)), cfg,
+                              verify)
         self.stats.add("queries", Q.shape[0])
 
         out = []
@@ -481,13 +544,24 @@ class DiskJoinIndex:
                 out.append((np.zeros(0, np.int64), np.zeros(0, np.float32)))
         return out
 
+    def _sorted_by_layout(self, buckets: list[int]) -> list[int]:
+        """Order an ad-hoc bucket set by disk placement, so a wave's
+        unioned miss set presents disk-adjacent buckets adjacently to the
+        prefetcher — the same batched/coalesced submission path the join
+        schedule gets, now for serving reads."""
+        if len(buckets) < 2 or not hasattr(self.store, "layout_keys"):
+            return buckets
+        keys = self.store.layout_keys(buckets)
+        return [buckets[i] for i in np.argsort(keys, kind="stable")]
+
     def _candidate_buckets(self, Q: np.ndarray,
                            cfg: JoinConfig) -> list[np.ndarray]:
         """Per-query candidate bucket ids: center search, point triangle
         inequality (‖q − c_b‖ − r_b ≤ ε), then Eq. 3 pruning with the
         query ball radius ε."""
-        if self._center_index is None:
-            self._center_index = make_center_index(self.meta.centers)
+        with self._center_lock:
+            if self._center_index is None:
+                self._center_index = make_center_index(self.meta.centers)
         eps = float(cfg.epsilon)
         L = min(cfg.max_candidates, self.meta.num_buckets)
         d2, cand = self._center_index.search(Q, L)
@@ -578,9 +652,8 @@ class DiskJoinIndex:
         """Batch-friendly path: a schedule prefetcher overlaps the misses'
         reads (per-device queues, batching/coalescing as configured)."""
         from repro.io import SchedulePrefetcher
-        actions = [(b, False, None) for b in misses]
         pf = SchedulePrefetcher(
-            self.store, actions, pool, lookahead=cfg.io_lookahead,
+            self.store, misses, pool, lookahead=cfg.io_lookahead,
             num_threads=cfg.io_threads, stats=self.stats,
             pad_value=PAD_COORD, batch_reads=cfg.io_batch_reads,
             coalesce=cfg.io_coalesce, close_pool=False)

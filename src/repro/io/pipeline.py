@@ -45,6 +45,12 @@ class PipelineStats:
     query_reads: int = 0          # bucket reads issued for queries (pooled)
     query_warm_hits: int = 0      # query candidates served from warm slabs
     query_fallback_reads: int = 0  # unpooled reads (pool fully contended)
+    # wave-batched serving (repro.serve.QueryScheduler): concurrent
+    # queries probing the same bucket in one wave share a single read
+    waves: int = 0                   # scheduler waves executed
+    shared_probe_reads: int = 0      # distinct buckets probed per wave, summed
+    reads_saved_by_sharing: int = 0  # per-query probe refs minus distinct
+    deadline_drops: int = 0          # requests expired & dropped pre-read
     device_loads: list = dataclasses.field(default_factory=list)
     device_depth_max: list = dataclasses.field(default_factory=list)
 

@@ -38,6 +38,8 @@ import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 
+import numpy as np
+
 from repro.io.buffer_pool import BufferPool
 from repro.io.pipeline import PipelineStats
 
@@ -70,8 +72,17 @@ class SchedulePrefetcher:
         self._device_of = (store.device_of if hasattr(store, "device_of")
                            else (lambda b: 0))
         self.stats.init_devices(self.num_devices)
-        # the miss sequence: the only accesses that touch the disk
-        self._loads = [int(b) for b, is_hit, _ in actions if not is_hit]
+        # the miss sequence: the only accesses that touch the disk.
+        # ``actions`` is either a cache schedule ((bucket, is_hit, victim)
+        # tuples — hits are skipped) or a plain bucket-id list (an ad-hoc
+        # miss set, e.g. a serving wave's unioned probe set, every entry
+        # of which is a read).
+        self._loads = []
+        for a in actions:
+            if isinstance(a, (int, np.integer)):
+                self._loads.append(int(a))
+            elif not a[1]:
+                self._loads.append(int(a[0]))
         self._results: dict[int, tuple[int, int] | BaseException] = {}
         self._issued = 0
         self._consumed = 0

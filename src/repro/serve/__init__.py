@@ -4,8 +4,20 @@
 ``VectorQueryService`` — ε-range point lookups over a ``DiskJoinIndex``
 session, sharing the index's BufferPool/prefetcher and PipelineStats with
 batch joins (ROADMAP "serving integration").
+``QueryScheduler`` — wave-batched request queue with probe-sharing,
+per-request deadlines and admission control (ROADMAP "serving
+hardening"); ``IndexRouter`` fronts multiple index shards with
+scatter/gather over per-shard schedulers. See README.md in this package
+for the request lifecycle.
 """
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.query_service import VectorQueryService
+from repro.serve.router import IndexRouter, RouterFuture
+from repro.serve.scheduler import (DeadlineExceeded, QueryFuture,
+                                   QueryScheduler, SchedulerClosed,
+                                   SchedulerQueueFull, order_result)
 
-__all__ = ["Request", "ServeEngine", "VectorQueryService"]
+__all__ = ["Request", "ServeEngine", "VectorQueryService",
+           "QueryScheduler", "QueryFuture", "IndexRouter", "RouterFuture",
+           "DeadlineExceeded", "SchedulerClosed", "SchedulerQueueFull",
+           "order_result"]

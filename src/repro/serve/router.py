@@ -1,0 +1,219 @@
+"""Multi-index router: one serving front door over sharded corpora.
+
+A billion-scale corpus is built as several ``DiskJoinIndex`` shards
+(separate bucketizations, separate stores — often separate machines'
+worth of SSDs). ``IndexRouter`` fronts them with the same request surface
+as a single index:
+
+  * **route** — a request only scatters to shards that can possibly
+    answer it: shard ``s`` is selected iff some bucket of ``s`` satisfies
+    the center-index proximity test ``‖q − c_b‖ − r_b ≤ ε`` (the same
+    triangle-inequality bound ``plan_probes`` uses, evaluated against the
+    shard's in-memory centers/radii — no disk I/O). A query deep inside
+    one shard's clusters skips the others entirely.
+  * **scatter/gather** — selected shards receive the request through
+    their own per-shard ``QueryScheduler``, so each shard forms its own
+    waves and shares probes across ALL concurrent traffic it sees
+    (including requests scattered by other router calls). The returned
+    ``RouterFuture`` gathers the shard futures.
+  * **merge** — shard-local ids are offset into one global id space
+    (``id_offsets``; defaults to cumulative shard sizes, matching shards
+    built from consecutive slices of one dataset) and the merged ε-result
+    is ordered deterministically (distance, then global id) — exactly the
+    ordering an unsharded index over the concatenated dataset returns.
+
+Deadline semantics are strict: a request resolves with
+``DeadlineExceeded`` if ANY selected shard dropped it — a partial answer
+is not an ε-range answer.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.index import DiskJoinIndex
+from repro.serve.scheduler import QueryScheduler, _check_k, order_result
+
+_EMPTY = (np.zeros(0, np.int64), np.zeros(0, np.float32))
+
+
+class RouterFuture:
+    """Gather handle over the selected shards' ``QueryFuture``s.
+
+    ``result(timeout)`` waits for every part, offsets shard-local ids into
+    the router's global id space, merges, and orders deterministically
+    (distance, then global id; truncated to the request's ``k``). Raises
+    the first shard exception (``DeadlineExceeded`` included) — strict
+    all-or-nothing semantics.
+    """
+
+    def __init__(self, parts: list[tuple], k: int | None):
+        self._parts = parts          # [(QueryFuture, id_offset), ...]
+        self._k = k
+
+    def done(self) -> bool:
+        return all(f.done() for f, _ in self._parts)
+
+    @property
+    def latency_s(self) -> float | None:
+        """Slowest part's enqueue→complete latency (None until done)."""
+        lats = [f.latency_s for f, _ in self._parts]
+        if not lats:
+            return 0.0
+        return None if any(v is None for v in lats) else max(lats)
+
+    def result(self, timeout: float | None = None
+               ) -> tuple[np.ndarray, np.ndarray]:
+        if not self._parts:
+            return _EMPTY
+        end = None if timeout is None else time.perf_counter() + timeout
+        acc_i, acc_d = [], []
+        for fut, off in self._parts:
+            rem = (None if end is None
+                   else max(0.0, end - time.perf_counter()))
+            ids, dists = fut.result(timeout=rem)
+            acc_i.append(ids + off)
+            acc_d.append(dists)
+        return order_result(np.concatenate(acc_i), np.concatenate(acc_d),
+                            self._k)
+
+
+class IndexRouter:
+    """Scatter/gather ε-range serving over multiple ``DiskJoinIndex``
+    shards, each behind its own wave scheduler.
+
+    Parameters:
+      shards: the member sessions (all must share one vector dim).
+      epsilon: default threshold; None falls back to each shard's own
+        query-time defaults (every shard must then have them).
+      id_offsets: global id base per shard; defaults to cumulative shard
+        sizes (shard i's local id ``j`` maps to ``offsets[i] + j``).
+      scheduler: kwargs forwarded to every per-shard ``QueryScheduler``
+        (wave_size, max_wait_s, max_queue, share_probes, io_mode=…, …).
+      close_shards: make ``close()`` also close the member indexes.
+    """
+
+    def __init__(self, shards: list[DiskJoinIndex], *,
+                 epsilon: float | None = None,
+                 id_offsets: list[int] | None = None,
+                 scheduler: dict | None = None,
+                 close_shards: bool = False):
+        if not shards:
+            raise ValueError("router needs at least one shard")
+        dims = {s.dim for s in shards}
+        if len(dims) != 1:
+            raise ValueError(f"shards disagree on vector dim: {sorted(dims)}")
+        self.dim = dims.pop()
+        if epsilon is None:
+            missing = [i for i, s in enumerate(shards)
+                       if s.query_defaults is None]
+            if missing:
+                raise ValueError(
+                    f"epsilon required: shard(s) {missing} have no "
+                    f"query-time defaults")
+        self.shards = list(shards)
+        self.epsilon = None if epsilon is None else float(epsilon)
+        if id_offsets is None:
+            sizes = [s.num_vectors for s in shards]
+            id_offsets = [0] + list(np.cumsum(sizes[:-1], dtype=np.int64))
+        if len(id_offsets) != len(shards):
+            raise ValueError(f"{len(id_offsets)} id_offsets for "
+                             f"{len(shards)} shards")
+        self.id_offsets = [int(o) for o in id_offsets]
+        self.schedulers = [QueryScheduler(s, epsilon=epsilon,
+                                          **dict(scheduler or {}))
+                           for s in shards]
+        self._close_shards = bool(close_shards)
+        self.requests = 0
+        self.scattered = 0
+
+    # -- routing --------------------------------------------------------------
+    def _effective_eps(self, shard: DiskJoinIndex,
+                       epsilon: float | None) -> float:
+        if epsilon is not None:
+            return float(epsilon)
+        if self.epsilon is not None:
+            return self.epsilon
+        return float(shard.query_defaults.epsilon)
+
+    def route(self, q: np.ndarray,
+              epsilon: float | None = None) -> list[int]:
+        """Shard indices whose center-index proximity test admits ``q`` —
+        the shards that can possibly hold an ε-neighbor (in-memory test,
+        no disk reads). Validates the query the same way the shards do
+        (dim + finiteness): a NaN query must raise, not silently admit
+        zero shards and read as "no neighbors"."""
+        q = self.shards[0]._validate_queries(q)[0]
+        out = []
+        for si, shard in enumerate(self.shards):
+            eps = self._effective_eps(shard, epsilon)
+            d = np.linalg.norm(shard.meta.centers - q[None, :], axis=1)
+            if np.any(d - shard.meta.radii <= eps):
+                out.append(si)
+        return out
+
+    # -- serving --------------------------------------------------------------
+    def submit(self, q: np.ndarray, *, epsilon: float | None = None,
+               k: int | None = None, deadline_s: float | None = None,
+               **overrides) -> RouterFuture:
+        """Scatter one request to the admitted shards → ``RouterFuture``.
+
+        Per-shard truncation to ``k`` is sound (the k nearest of the union
+        lie within the union of per-shard k-nearest); the gather merges
+        and truncates again globally.
+        """
+        k = _check_k(k)
+        selected = self.route(q, epsilon)
+        parts = []
+        for si in selected:
+            fut = self.schedulers[si].submit(
+                q, epsilon=epsilon, k=k, deadline_s=deadline_s,
+                **overrides)
+            parts.append((fut, self.id_offsets[si]))
+        self.requests += 1
+        self.scattered += len(parts)
+        return RouterFuture(parts, k)
+
+    def query(self, q: np.ndarray, *, epsilon: float | None = None,
+              k: int | None = None, deadline_s: float | None = None,
+              timeout: float | None = None,
+              **overrides) -> tuple[np.ndarray, np.ndarray]:
+        """Synchronous scatter/gather for one query."""
+        return self.submit(q, epsilon=epsilon, k=k, deadline_s=deadline_s,
+                           **overrides).result(timeout=timeout)
+
+    def query_batch(self, Q: np.ndarray, *, epsilon: float | None = None,
+                    k: int | None = None, deadline_s: float | None = None,
+                    timeout: float | None = None, **overrides
+                    ) -> list[tuple[np.ndarray, np.ndarray]]:
+        """Submit a batch (members share shard waves), gather all."""
+        Q = np.atleast_2d(np.asarray(Q, np.float32))
+        futs = [self.submit(q, epsilon=epsilon, k=k, deadline_s=deadline_s,
+                            **overrides) for q in Q]
+        return [f.result(timeout=timeout) for f in futs]
+
+    # -- telemetry / lifecycle ------------------------------------------------
+    def snapshot(self) -> dict:
+        """Router fan-out counters plus every shard scheduler's snapshot."""
+        return {
+            "requests": self.requests,
+            "scattered": self.scattered,
+            "fanout_mean": self.scattered / self.requests
+            if self.requests else 0.0,
+            "num_shards": len(self.shards),
+            "shards": [s.snapshot() for s in self.schedulers],
+        }
+
+    def close(self) -> None:
+        for s in self.schedulers:
+            s.close()
+        if self._close_shards:
+            for s in self.shards:
+                s.close()
+
+    def __enter__(self) -> "IndexRouter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,409 @@
+"""Wave-batched query scheduler: probe-sharing across concurrent requests.
+
+DiskJoin's regime is I/O-bound, so the dominant serving cost is candidate-
+bucket reads — and concurrent ε-range queries over a clustered corpus probe
+heavily *overlapping* bucket sets. The synchronous facade
+(``VectorQueryService`` calling ``DiskJoinIndex.query_batch`` per request)
+makes N callers probing the same hot bucket pay N reads. Work-sharing
+vector-join systems (Kim et al., PAPERS.md) show that merging overlapping
+probe work across concurrent threshold queries is the dominant win in
+exactly this setting.
+
+``QueryScheduler`` is that merge point, mirroring the wave design of
+``serve/engine.py``:
+
+  1. **queue** — ``submit`` validates the request eagerly and enqueues it
+     into a bounded queue (admission control: ``SchedulerQueueFull`` when
+     ``max_queue`` requests are already pending), returning a
+     ``QueryFuture``;
+  2. **wave** — a drain thread forms waves of up to ``wave_size`` requests,
+     waiting at most ``max_wait_s`` past the first pending request (size OR
+     time-window trigger);
+  3. **deadline** — requests whose deadline already passed are dropped
+     *before any read* and resolve with ``DeadlineExceeded``
+     (``PipelineStats.deadline_drops``);
+  4. **shared probe** — the wave is planned once
+     (``DiskJoinIndex.plan_probes``: center index + triangle inequality +
+     Eq. 3 pruning, no disk I/O), the per-query candidate-bucket sets are
+     unioned, and ``execute_probes`` issues ONE read per distinct bucket
+     through the session's shared ``BufferPool``/prefetcher — the resident
+     slab fans out to every member query's verify
+     (``PipelineStats.shared_probe_reads`` / ``reads_saved_by_sharing``);
+  5. **future** — results are ordered deterministically (distance, then id)
+     and delivered; ``QueryFuture.latency_s`` records the true
+     enqueue→complete latency of *that request* (not a share of the wave's
+     wall time), and the scheduler keeps a separate per-wave histogram.
+
+Requests carrying different query-time overrides (ε, io_mode, …) are
+grouped within the wave and share probes within their group only — one
+``plan``/``execute`` cycle needs one config.
+
+Thread model: any number of submitter threads; ONE drain thread executes
+waves, so scheduler traffic presents to the index exactly like the
+single-threaded ``query_batch`` caller the session pool's liveness
+reasoning assumes (warm pins, one transient slab per miss, fallback reads
+under contention) — safe to race against concurrent batch joins.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+
+import numpy as np
+
+from repro.core.index import DiskJoinIndex
+from repro.core.types import BUILD_TIME_FIELDS, QUERY_TIME_FIELDS
+
+
+class DeadlineExceeded(Exception):
+    """The request's deadline passed before its wave started reading."""
+
+
+class SchedulerClosed(RuntimeError):
+    """submit() after close()."""
+
+
+class SchedulerQueueFull(RuntimeError):
+    """Admission control: the bounded request queue is at capacity."""
+
+
+def _check_k(k) -> int | None:
+    if k is None:
+        return None
+    k = int(k)
+    if k < 0:
+        raise ValueError(f"k must be >= 0, got {k}")
+    return k
+
+
+def order_result(ids: np.ndarray, dists: np.ndarray,
+                 k: int | None = None) -> tuple[np.ndarray, np.ndarray]:
+    """Deterministic result ordering: by distance, ties broken by vector
+    id — identical queries return identical orderings regardless of
+    io_mode, striping or candidate-bucket read order."""
+    order = np.lexsort((ids, dists))
+    k = _check_k(k)
+    if k is not None:
+        order = order[:k]
+    return ids[order], dists[order]
+
+
+def summarize_waves(waves: list[tuple[int, float]]) -> dict:
+    """Percentile summary of a (size, service seconds) wave histogram —
+    one schema for the scheduler's and the direct service's snapshots."""
+    sizes = np.asarray([w[0] for w in waves], np.float64)
+    svc = np.asarray([w[1] for w in waves], np.float64) * 1e3
+    return {
+        "count": len(waves),
+        "size_mean": float(sizes.mean()) if sizes.size else 0.0,
+        "size_max": int(sizes.max()) if sizes.size else 0,
+        "service_p50_ms": (float(np.percentile(svc, 50))
+                           if svc.size else 0.0),
+        "service_p95_ms": (float(np.percentile(svc, 95))
+                           if svc.size else 0.0),
+    }
+
+
+class QueryFuture(Future):
+    """Handle for one scheduled request.
+
+    ``result(timeout)`` → (ids, distances), nearest first with ties broken
+    by id, truncated to the request's ``k``. Raises ``DeadlineExceeded`` if
+    the request expired pre-read, ``SchedulerClosed`` if the scheduler shut
+    down underneath it. ``latency_s`` (set on completion) is the request's
+    true enqueue→complete latency.
+    """
+
+    latency_s: float | None = None
+
+
+@dataclasses.dataclass
+class _Request:
+    q: np.ndarray                 # (dim,) float32, validated
+    k: int | None
+    overrides: tuple              # sorted (key, value) pairs — group key
+    enqueue_t: float
+    deadline_t: float | None
+    future: QueryFuture
+
+
+class QueryScheduler:
+    """Wave-batched serving frontend over one ``DiskJoinIndex`` session.
+
+    Parameters:
+      index: the session to serve from.
+      epsilon: default threshold (falls back to the index's query-time
+        defaults; required if the index has none).
+      wave_size: max requests per wave (size trigger).
+      max_wait_s: max time a wave waits past its first request before
+        executing partially filled (time-window trigger). 0 drains
+        whatever is queued without waiting.
+      max_queue: admission bound — ``submit`` raises
+        ``SchedulerQueueFull`` beyond this many pending requests.
+      share_probes: plan the wave once and read each distinct bucket once
+        (the point of this class). False executes members independently —
+        wave batching without sharing, kept for A/B measurement
+        (``benchmarks/fig22_scheduler.py``'s "naive-batch").
+      **overrides: query-time config overrides applied to every request
+        (e.g. ``io_mode="prefetch"``), validated eagerly.
+    """
+
+    def __init__(self, index: DiskJoinIndex, *,
+                 epsilon: float | None = None,
+                 wave_size: int = 32, max_wait_s: float = 0.002,
+                 max_queue: int = 1024, share_probes: bool = True,
+                 latency_window: int = 8192, **overrides):
+        if wave_size < 1:
+            raise ValueError(f"wave_size must be >= 1, got {wave_size}")
+        if max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        if max_wait_s < 0:
+            raise ValueError(f"max_wait_s must be >= 0, got {max_wait_s}")
+        self.index = index
+        self.wave_size = int(wave_size)
+        self.max_wait_s = float(max_wait_s)
+        self.max_queue = int(max_queue)
+        self.share_probes = bool(share_probes)
+        self._check_overrides(overrides)
+        self._overrides = dict(overrides)
+        if epsilon is None and "epsilon" not in overrides \
+                and index.query_defaults is None:
+            raise ValueError(
+                "epsilon required: the index has no query-time defaults")
+        self.epsilon = None if epsilon is None else float(epsilon)
+
+        self._queue: deque[_Request] = deque()
+        self._cond = threading.Condition()
+        self._closed = False
+        # telemetry (under _stats_lock; the drain thread and submitters
+        # both touch it)
+        self._stats_lock = threading.Lock()
+        self.submitted = 0
+        self.completed = 0
+        self.rejected = 0
+        self.deadline_drops = 0
+        self.waves = 0
+        self._latencies: deque[float] = deque(maxlen=int(latency_window))
+        self._wave_hist: deque[tuple[int, float]] = deque(
+            maxlen=int(latency_window))
+        self._drain = threading.Thread(target=self._drain_loop,
+                                       name="diskjoin-serve-drain",
+                                       daemon=True)
+        self._drain.start()
+
+    @staticmethod
+    def _check_overrides(overrides: dict) -> None:
+        bad = sorted(set(overrides) & BUILD_TIME_FIELDS)
+        if bad:
+            raise ValueError(
+                f"build-time parameter(s) {bad} are fixed by the on-disk "
+                f"index; rebuild with DiskJoinIndex.build to change them")
+        unknown = sorted(set(overrides) - QUERY_TIME_FIELDS)
+        if unknown:
+            raise TypeError(f"unknown query-time parameter(s) {unknown}")
+
+    # -- submission -----------------------------------------------------------
+    def submit(self, q: np.ndarray, *, epsilon: float | None = None,
+               k: int | None = None, deadline_s: float | None = None,
+               **overrides) -> QueryFuture:
+        """Enqueue one ε-range request → ``QueryFuture``.
+
+        ``deadline_s`` is a relative deadline from now; a request whose
+        deadline passes while it waits is dropped before any disk read and
+        its future raises ``DeadlineExceeded``. Raises
+        ``SchedulerQueueFull`` when ``max_queue`` requests are pending
+        (admission control — shed load at the door, not after the reads).
+        """
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError(f"deadline_s must be > 0, got {deadline_s}")
+        k = _check_k(k)
+        q = self.index._validate_queries(q)
+        if q.shape[0] != 1:
+            raise ValueError(
+                f"submit takes one query vector, got a batch of "
+                f"{q.shape[0]}; submit them individually to share waves")
+        ov = dict(self._overrides)
+        ov.update(overrides)
+        eps = self.epsilon if epsilon is None else float(epsilon)
+        if eps is not None:
+            ov["epsilon"] = eps
+        self._check_overrides(ov)
+        fut = QueryFuture()
+        now = time.perf_counter()
+        req = _Request(q=q[0], k=k,
+                       overrides=tuple(sorted(ov.items())),
+                       enqueue_t=now,
+                       deadline_t=None if deadline_s is None
+                       else now + float(deadline_s),
+                       future=fut)
+        with self._cond:
+            if self._closed:
+                raise SchedulerClosed("scheduler is closed")
+            if len(self._queue) >= self.max_queue:
+                with self._stats_lock:
+                    self.rejected += 1
+                raise SchedulerQueueFull(
+                    f"request queue full ({self.max_queue} pending)")
+            self._queue.append(req)
+            self._cond.notify_all()
+        with self._stats_lock:
+            self.submitted += 1
+        return fut
+
+    def query(self, q: np.ndarray, *, epsilon: float | None = None,
+              k: int | None = None, deadline_s: float | None = None,
+              timeout: float | None = None,
+              **overrides) -> tuple[np.ndarray, np.ndarray]:
+        """Synchronous convenience: ``submit`` + wait."""
+        return self.submit(q, epsilon=epsilon, k=k, deadline_s=deadline_s,
+                           **overrides).result(timeout=timeout)
+
+    @property
+    def pending(self) -> int:
+        with self._cond:
+            return len(self._queue)
+
+    # -- wave formation -------------------------------------------------------
+    def _drain_loop(self) -> None:
+        while True:
+            with self._cond:
+                while not self._queue and not self._closed:
+                    self._cond.wait()
+                if not self._queue:       # closed and fully drained
+                    return
+                # time-window trigger: wait for the wave to fill, but at
+                # most max_wait_s past the FIRST pending request
+                window_end = self._queue[0].enqueue_t + self.max_wait_s
+                while (len(self._queue) < self.wave_size
+                       and not self._closed):
+                    remaining = window_end - time.perf_counter()
+                    if remaining <= 0:
+                        break
+                    self._cond.wait(timeout=remaining)
+                wave = [self._queue.popleft()
+                        for _ in range(min(self.wave_size,
+                                           len(self._queue)))]
+            try:
+                self._run_wave(wave)
+            except BaseException as e:      # never kill the drain thread
+                for r in wave:
+                    if not r.future.done():
+                        r.future.set_exception(e)
+
+    # -- wave execution -------------------------------------------------------
+    def _run_wave(self, wave: list[_Request]) -> None:
+        t0 = time.perf_counter()
+        # transition every member to RUNNING: a client that cancel()ed a
+        # pending future drops out here, and no later cancel can race the
+        # set_result/set_exception below (InvalidStateError-free)
+        wave = [r for r in wave
+                if r.future.set_running_or_notify_cancel()]
+        live: list[_Request] = []
+        drops = 0
+        for r in wave:
+            if r.deadline_t is not None and t0 > r.deadline_t:
+                r.future.latency_s = t0 - r.enqueue_t
+                r.future.set_exception(DeadlineExceeded(
+                    f"deadline passed {t0 - r.deadline_t:.4f}s before the "
+                    f"wave started (no read was issued)"))
+                drops += 1
+            else:
+                live.append(r)
+        if drops:
+            self.index.stats.add("deadline_drops", drops)
+            with self._stats_lock:
+                self.deadline_drops += drops
+
+        # group by effective query-time config: probe sharing needs one
+        # plan/execute cycle per config (most traffic uses the defaults
+        # and lands in a single group)
+        groups: dict[tuple, list[_Request]] = {}
+        for r in live:
+            groups.setdefault(r.overrides, []).append(r)
+        for key, members in groups.items():
+            self._run_group(dict(key), members)
+
+        self.index.stats.add("waves", 1)
+        with self._stats_lock:
+            self.waves += 1
+            self._wave_hist.append((len(wave), time.perf_counter() - t0))
+
+    def _run_group(self, ov: dict, members: list[_Request]) -> None:
+        Q = np.stack([r.q for r in members])
+        try:
+            plan = self.index.plan_probes(Q, **ov)
+            if self.share_probes:
+                refs = sum(len(p) for p in plan)
+                distinct = len({int(b) for p in plan for b in p})
+                if distinct:
+                    self.index.stats.add("shared_probe_reads", distinct)
+                    self.index.stats.add("reads_saved_by_sharing",
+                                         refs - distinct)
+                results = self.index.execute_probes(Q, plan, **ov)
+            else:
+                # A/B baseline: per-request execution, no sharing
+                results = []
+                for i in range(len(members)):
+                    results.extend(self.index.execute_probes(
+                        Q[i:i + 1], [plan[i]], **ov))
+        except BaseException as e:
+            now = time.perf_counter()
+            for r in members:
+                r.future.latency_s = now - r.enqueue_t
+                r.future.set_exception(e)
+            return
+        now = time.perf_counter()
+        lats = []
+        for r, (ids, dists) in zip(members, results):
+            r.future.latency_s = now - r.enqueue_t
+            lats.append(r.future.latency_s)
+            r.future.set_result(order_result(ids, dists, r.k))
+        with self._stats_lock:
+            self.completed += len(members)
+            self._latencies.extend(lats)
+
+    # -- telemetry / lifecycle ------------------------------------------------
+    def snapshot(self) -> dict:
+        """Scheduler counters, true per-request latency percentiles, the
+        per-wave histogram summary, and the index session's PipelineStats
+        (one surface for waves, shared reads, joins and queries)."""
+        with self._stats_lock:
+            lats = np.asarray(self._latencies, np.float64)
+            waves = list(self._wave_hist)
+            d = {
+                "submitted": self.submitted,
+                "completed": self.completed,
+                "rejected": self.rejected,
+                "deadline_drops": self.deadline_drops,
+                "waves": self.waves,
+            }
+        d["pending"] = self.pending
+        d["latency_p50_ms"] = (float(np.percentile(lats, 50)) * 1e3
+                               if lats.size else 0.0)
+        d["latency_p95_ms"] = (float(np.percentile(lats, 95)) * 1e3
+                               if lats.size else 0.0)
+        d["latency_mean_ms"] = (float(lats.mean()) * 1e3
+                                if lats.size else 0.0)
+        d["wave"] = summarize_waves(waves)
+        d["pipeline"] = self.index.pipeline_snapshot()
+        return d
+
+    def close(self) -> None:
+        """Stop accepting requests, drain every pending wave, join the
+        drain thread. Pending futures complete normally (or with their
+        deadline/config error) — close never abandons accepted work."""
+        with self._cond:
+            if self._closed:
+                return
+            self._closed = True
+            self._cond.notify_all()
+        self._drain.join()
+
+    def __enter__(self) -> "QueryScheduler":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

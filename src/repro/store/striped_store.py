@@ -116,6 +116,24 @@ class StripedBucketedVectorStore:
         return dev.contiguous_after(int(self._local_id[a]),
                                     int(self._local_id[b]))
 
+    def layout_keys(self, buckets) -> np.ndarray:
+        """Disk-placement sort key (see ``BucketedVectorStore.layout_keys``).
+
+        Offset-major with the device as tie-break: sorting an unordered
+        miss set by this key keeps each device's disk-contiguous buckets
+        adjacent (coalescible) while still interleaving devices at extent
+        granularity, so one device's backlog never serializes the rest."""
+        buckets = np.asarray(buckets, dtype=np.int64)
+        devs = self._device_of[buckets]
+        keys = np.empty(len(buckets), dtype=np.int64)
+        for d in range(self.num_devices):
+            m = devs == d
+            if m.any():
+                local = self._local_id[buckets[m]]
+                keys[m] = (self.devices[d].bucket_offsets[local]
+                           * self.num_devices + d)
+        return keys
+
     # -- reads ---------------------------------------------------------------
     def read_bucket(self, b: int) -> tuple[np.ndarray, np.ndarray]:
         return self.devices[self.device_of(b)].read_bucket(

@@ -179,6 +179,14 @@ class BucketedVectorStore:
         return (int(self.bucket_offsets[b])
                 == int(self.bucket_offsets[a]) + int(self.bucket_sizes[a]))
 
+    def layout_keys(self, buckets) -> np.ndarray:
+        """Disk-placement sort key per bucket: an *unordered* bucket set
+        (e.g. a serving wave's unioned miss set) read in ascending key
+        order visits the file in extent order, so disk-adjacent buckets
+        become read-adjacent and the prefetcher's batching/coalescing
+        applies to ad-hoc sets the same way it does to join schedules."""
+        return self.bucket_offsets[np.asarray(buckets, dtype=np.int64)]
+
     # -- reads --------------------------------------------------------------
     def read_bucket(self, b: int) -> tuple[np.ndarray, np.ndarray]:
         """One sequential read of bucket b → (vectors, original ids)."""

@@ -1,0 +1,510 @@
+"""Wave-batched serving subsystem: QueryScheduler probe-sharing, deadline
+drops, admission control, IndexRouter scatter/gather parity, deterministic
+result ordering, query input validation, and scheduler waves racing batch
+joins on one session pool."""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import DiskJoinIndex, JoinConfig
+from repro.data import clustered_vectors
+from repro.serve import (DeadlineExceeded, IndexRouter, QueryScheduler,
+                         SchedulerClosed, SchedulerQueueFull,
+                         VectorQueryService)
+from repro.store.vector_store import FlatVectorStore
+
+EPS = 0.35
+
+
+@pytest.fixture(scope="module")
+def data():
+    return clustered_vectors(2500, 24, seed=9)
+
+
+@pytest.fixture()
+def flat_store(tmp_path):
+    def make(x, name="x.bin"):
+        return FlatVectorStore.from_array(str(tmp_path / name), x)
+    return make
+
+
+def _cfg(**kw):
+    base = dict(epsilon=EPS, recall_target=0.9, pad_align=64,
+                num_buckets=20, memory_budget_bytes=1 << 20)
+    base.update(kw)
+    return JoinConfig(**base)
+
+
+def _build(flat_store, tmp_path, x, name="idx", **kw):
+    return DiskJoinIndex.build(flat_store(x, f"{name}.bin"), _cfg(**kw),
+                               str(tmp_path / name))
+
+
+def _truth(x, q, eps=EPS):
+    return np.linalg.norm(x - q[None, :], axis=1) <= eps
+
+
+# ---------------------------------------------------------------------------
+# plan/execute split on the index
+# ---------------------------------------------------------------------------
+class TestPlanExecuteSplit:
+    def test_execute_planned_probes_matches_query_batch(self, data,
+                                                        flat_store,
+                                                        tmp_path):
+        x = data
+        index = _build(flat_store, tmp_path, x)
+        Q = x[:6] + 0.01
+        plan = index.plan_probes(Q)
+        assert len(plan) == 6 and all(p.dtype == np.int64 for p in plan)
+        split = index.execute_probes(Q, plan)
+        fused = index.query_batch(Q)
+        for (i1, d1), (i2, d2) in zip(split, fused):
+            assert set(i1.tolist()) == set(i2.tolist())
+        index.close()
+
+    def test_plan_is_pure_metadata_no_reads(self, data, flat_store,
+                                            tmp_path):
+        x = data
+        index = _build(flat_store, tmp_path, x)
+        before = index.io_snapshot()["read_ops"]
+        index.plan_probes(x[:4])
+        assert index.io_snapshot()["read_ops"] == before
+        index.close()
+
+    def test_mismatched_plan_rejected(self, data, flat_store, tmp_path):
+        x = data
+        index = _build(flat_store, tmp_path, x)
+        plan = index.plan_probes(x[:3])
+        with pytest.raises(ValueError, match="probe plan"):
+            index.execute_probes(x[:5], plan)
+        index.close()
+
+
+# ---------------------------------------------------------------------------
+# query input validation (satellite)
+# ---------------------------------------------------------------------------
+class TestQueryValidation:
+    @pytest.fixture()
+    def index(self, data, flat_store, tmp_path):
+        ix = _build(flat_store, tmp_path, data)
+        yield ix
+        ix.close()
+
+    def test_wrong_dim_rejected(self, index):
+        with pytest.raises(ValueError, match="incompatible"):
+            index.query(np.zeros(7, np.float32))
+        with pytest.raises(ValueError, match="incompatible"):
+            index.query_batch(np.zeros((2, 7), np.float32))
+
+    def test_nan_inf_rejected(self, index, data):
+        q = data[0].copy()
+        q[3] = np.nan
+        with pytest.raises(ValueError, match="NaN/Inf"):
+            index.query(q)
+        q[3] = np.inf
+        with pytest.raises(ValueError, match="NaN/Inf"):
+            index.query_batch(q[None, :])
+
+    def test_scheduler_submit_validates_eagerly(self, index, data):
+        sched = QueryScheduler(index)
+        bad = data[0].copy()
+        bad[0] = np.nan
+        with pytest.raises(ValueError, match="NaN/Inf"):
+            sched.submit(bad)
+        with pytest.raises(ValueError, match="build-time"):
+            sched.submit(data[0], num_buckets=5)
+        with pytest.raises(TypeError, match="unknown"):
+            sched.submit(data[0], bogus=1)
+        with pytest.raises(ValueError, match="one query vector"):
+            sched.submit(data[:2])
+        with pytest.raises(ValueError, match="k must be"):
+            sched.submit(data[0], k=-1)
+        sched.close()
+
+    def test_cancelled_future_does_not_poison_wave(self, index, data):
+        """A client cancel() on one pending request must not fail its
+        wave mates or skip the wave counters."""
+        sched = QueryScheduler(index, wave_size=4, max_wait_s=0.2)
+        f1 = sched.submit(data[0])
+        f2 = sched.submit(data[1])
+        assert f2.cancel()
+        f3 = sched.submit(data[2])
+        assert len(f1.result(timeout=30)[0]) >= 1
+        assert len(f3.result(timeout=30)[0]) >= 1
+        assert f2.cancelled()
+        assert sched.snapshot()["waves"] >= 1
+        sched.close()
+
+
+# ---------------------------------------------------------------------------
+# wave scheduler
+# ---------------------------------------------------------------------------
+class TestQueryScheduler:
+    def test_wave_sharing_parity_and_counters(self, data, flat_store,
+                                              tmp_path):
+        """64 concurrent overlapping queries: identical results to the
+        per-request path, measurably fewer reads (the acceptance
+        criterion's reads_saved_by_sharing > 0)."""
+        x = data
+        index = _build(flat_store, tmp_path, x)
+        rng = np.random.default_rng(0)
+        qs = x[rng.choice(x.shape[0], 64)] + 0.001
+        with QueryScheduler(index, wave_size=32, max_wait_s=0.05) as sched:
+            futs = [sched.submit(q) for q in qs]
+            res = [f.result(timeout=60) for f in futs]
+            snap = sched.snapshot()
+        assert snap["completed"] == 64
+        assert snap["waves"] >= 1
+        assert snap["pipeline"]["waves"] == snap["waves"]
+        # overlapping probes were merged: strictly fewer reads than refs
+        assert snap["pipeline"]["reads_saved_by_sharing"] > 0
+        assert snap["pipeline"]["shared_probe_reads"] > 0
+        for q, (ids, dists) in zip(qs, res):
+            want = set(np.flatnonzero(_truth(x, q)).tolist())
+            got = set(ids.tolist())
+            assert got <= want
+            np.testing.assert_allclose(
+                dists, np.linalg.norm(x[ids] - q[None, :], axis=1),
+                atol=1e-4)
+            assert np.all(np.diff(dists) >= 0)
+        assert all(f.latency_s is not None and f.latency_s > 0
+                   for f in futs)
+        index.close()
+
+    def test_mixed_epsilon_requests_group_within_wave(self, data,
+                                                      flat_store,
+                                                      tmp_path):
+        x = data
+        index = _build(flat_store, tmp_path, x)
+        with QueryScheduler(index, wave_size=16, max_wait_s=0.05) as sched:
+            f1 = sched.submit(x[5], epsilon=EPS)
+            f2 = sched.submit(x[5], epsilon=EPS * 0.5)
+            wide = set(f1.result(timeout=30)[0].tolist())
+            narrow = set(f2.result(timeout=30)[0].tolist())
+        assert narrow <= wide
+        assert 5 in narrow                       # the query itself
+        truth_narrow = set(np.flatnonzero(
+            _truth(x, x[5], EPS * 0.5)).tolist())
+        assert narrow <= truth_narrow            # exact distances
+        index.close()
+
+    def test_admission_control_bounded_queue(self, data, flat_store,
+                                             tmp_path):
+        x = data
+        index = _build(flat_store, tmp_path, x,
+                       emulate_read_latency_s=0.02)
+        sched = QueryScheduler(index, wave_size=1, max_wait_s=0.0,
+                               max_queue=2)
+        try:
+            sched.submit(x[0])          # drain thread picks this up
+            time.sleep(0.01)            # let it start its (slow) reads
+            sched.submit(x[1])
+            sched.submit(x[2])          # queue now at max_queue
+            with pytest.raises(SchedulerQueueFull):
+                sched.submit(x[3])
+            assert sched.snapshot()["rejected"] == 1
+        finally:
+            sched.close()
+        index.close()
+
+    def test_deadline_expired_requests_drop_pre_read(self, data,
+                                                     flat_store,
+                                                     tmp_path):
+        """Under an emulated-latency store, a request whose deadline
+        passes while queued resolves as deadline_exceeded without
+        touching the disk."""
+        x = data
+        index = _build(flat_store, tmp_path, x,
+                       emulate_read_latency_s=0.02)
+        sched = QueryScheduler(index, wave_size=8, max_wait_s=0.05)
+        filler = sched.submit(x[0])             # keeps the wave open
+        doomed = sched.submit(x[1], deadline_s=1e-4)
+        reads_before = index.stats.query_reads
+        with pytest.raises(DeadlineExceeded):
+            doomed.result(timeout=30)
+        assert doomed.latency_s is not None
+        filler.result(timeout=30)               # unaffected member
+        sched.close()
+        snap = sched.snapshot()
+        assert snap["deadline_drops"] == 1
+        assert snap["pipeline"]["deadline_drops"] == 1
+        assert snap["completed"] == 1
+        # the drop happened before any read for the doomed request: only
+        # the filler's candidate buckets were read in that wave
+        filler_buckets = len(index.plan_probes(x[:1])[0])
+        assert index.stats.query_reads - reads_before <= filler_buckets
+        index.close()
+
+    def test_close_drains_pending_then_rejects(self, data, flat_store,
+                                               tmp_path):
+        x = data
+        index = _build(flat_store, tmp_path, x)
+        sched = QueryScheduler(index, wave_size=4, max_wait_s=0.2)
+        futs = [sched.submit(q) for q in x[:10]]
+        sched.close()                   # drains, never abandons
+        assert all(f.done() for f in futs)
+        assert all(len(f.result()[0]) >= 1 for f in futs)  # self-match
+        with pytest.raises(SchedulerClosed):
+            sched.submit(x[0])
+        index.close()
+
+    def test_share_probes_off_reads_more(self, data, flat_store, tmp_path):
+        """A/B: the same overlapping workload, shared vs per-request
+        execution — sharing must issue strictly fewer pooled reads."""
+        x = data
+        rng = np.random.default_rng(3)
+        qs = x[rng.choice(200, 48)] + 0.001   # clustered → heavy overlap
+        reads = {}
+        for share in (True, False):
+            index = _build(flat_store, tmp_path, x,
+                           name=f"idx_share_{share}")
+            with QueryScheduler(index, wave_size=48, max_wait_s=0.2,
+                                share_probes=share) as sched:
+                futs = [sched.submit(q) for q in qs]
+                for f in futs:
+                    f.result(timeout=60)
+            snap = index.pipeline_snapshot()
+            reads[share] = (snap["query_reads"]
+                            + snap["query_fallback_reads"]
+                            + snap["query_warm_hits"])
+            index.close()
+        assert reads[True] < reads[False]
+
+
+# ---------------------------------------------------------------------------
+# deterministic result ordering (satellite)
+# ---------------------------------------------------------------------------
+class TestDeterministicOrdering:
+    def test_ties_ordered_by_id_across_io_modes_and_striping(self,
+                                                             tmp_path):
+        """Duplicate vectors force exact distance ties; the full (ids,
+        dists) sequence must be identical across io_mode × striping."""
+        base = clustered_vectors(1200, 16, seed=4)
+        x = np.concatenate([base, base[:200]])  # ids 1200.. dup ids 0..199
+        q = base[7] + 0.004
+        seqs = {}
+        for name, kw in (
+                ("sync_1dev", dict()),
+                ("prefetch_1dev", dict(io_mode="prefetch")),
+                ("sync_3dev", dict(io_devices=3)),
+                ("prefetch_3dev_coalesce", dict(io_mode="prefetch",
+                                                io_devices=3,
+                                                io_coalesce=True,
+                                                io_batch_reads=True))):
+            store = FlatVectorStore.from_array(
+                str(tmp_path / f"{name}.bin"), x)
+            index = DiskJoinIndex.build(
+                store, _cfg(num_buckets=16, **kw),
+                str(tmp_path / f"ix_{name}"))
+            svc = VectorQueryService(index)
+            ids, dists = svc.query(q)
+            seqs[name] = (ids.tolist(), np.round(dists, 5).tolist())
+            # ties resolve by ascending id
+            for i in range(len(ids) - 1):
+                if dists[i] == dists[i + 1]:
+                    assert ids[i] < ids[i + 1]
+            index.close()
+        ref = seqs["sync_1dev"]
+        assert ref[0], "query must have matches"
+        for name, seq in seqs.items():
+            assert seq == ref, f"{name} ordering diverged"
+
+    def test_duplicate_rows_tie_break(self, tmp_path):
+        x = np.zeros((40, 8), np.float32)
+        x[::2] = 1.0    # two point masses, 20 exact duplicates each
+        store = FlatVectorStore.from_array(str(tmp_path / "t.bin"), x)
+        index = DiskJoinIndex.build(
+            store, _cfg(epsilon=0.5, num_buckets=2, prune=False),
+            str(tmp_path / "ix_t"))
+        svc = VectorQueryService(index)
+        ids, dists = svc.query(np.zeros(8, np.float32))
+        assert ids.tolist() == list(range(1, 40, 2))  # all ties: id order
+        assert np.all(dists == dists[0])
+        index.close()
+
+
+# ---------------------------------------------------------------------------
+# latency accounting (satellite)
+# ---------------------------------------------------------------------------
+class TestLatencyAccounting:
+    def test_direct_batch_members_record_full_wall_time(self, data,
+                                                        flat_store,
+                                                        tmp_path):
+        x = data
+        index = _build(flat_store, tmp_path, x)
+        svc = VectorQueryService(index)
+        svc.query_batch(x[:8] + 0.01)
+        snap = svc.snapshot()
+        assert snap["requests"] == 8
+        # every member records the batch wall, NOT wall/8: p95 == p50
+        assert snap["latency_p95_ms"] == pytest.approx(
+            snap["latency_p50_ms"])
+        assert snap["wave"]["count"] == 1
+        assert snap["wave"]["size_mean"] == 8
+        assert snap["wave"]["service_p95_ms"] == pytest.approx(
+            snap["latency_p50_ms"])
+        index.close()
+
+    def test_scheduled_service_records_true_per_request_latency(
+            self, data, flat_store, tmp_path):
+        x = data
+        index = _build(flat_store, tmp_path, x)
+        svc = VectorQueryService(index, scheduler=True)
+        svc.query(x[3])
+        svc.query_batch(x[:4] + 0.01)
+        snap = svc.snapshot()
+        assert snap["requests"] == 5
+        assert snap["scheduler"]["completed"] == 5
+        assert snap["latency_p95_ms"] > 0
+        assert snap["wave"]["count"] >= 1
+        svc.close()
+        index.close()
+
+
+# ---------------------------------------------------------------------------
+# scheduler racing a batch join on one session pool (satellite)
+# ---------------------------------------------------------------------------
+class TestConcurrentServing:
+    def test_scheduler_waves_race_self_join_no_deadlock(self, data,
+                                                        flat_store,
+                                                        tmp_path):
+        x = data
+        index = _build(flat_store, tmp_path, x, io_mode="prefetch",
+                       emulate_read_latency_s=2e-4)
+        ref = index.self_join()
+        out = {}
+
+        def joiner():
+            out["res"] = index.self_join()
+
+        with QueryScheduler(index, wave_size=8, max_wait_s=0.002) as sched:
+            t = threading.Thread(target=joiner)
+            t.start()
+            results = []
+            while t.is_alive():
+                q = x[11]
+                results.append((q, sched.query(q, timeout=60)))
+            t.join(timeout=60)
+            assert not t.is_alive()
+        assert len(results) > 0
+        # join result unchanged by the racing waves
+        ref_keys = set(map(tuple, ref.pairs.tolist()))
+        got_keys = set(map(tuple, out["res"].pairs.tolist()))
+        assert got_keys == ref_keys
+        expected = set(np.flatnonzero(_truth(x, x[11])).tolist())
+        for q, (ids, _) in results:
+            assert set(ids.tolist()) <= expected
+        index.close()
+
+
+# ---------------------------------------------------------------------------
+# multi-index router
+# ---------------------------------------------------------------------------
+class TestIndexRouter:
+    def _build_shards(self, x, tmp_path, n_shards=4, **kw):
+        shards = []
+        bounds = np.linspace(0, x.shape[0], n_shards + 1).astype(int)
+        for si in range(n_shards):
+            part = x[bounds[si]:bounds[si + 1]]
+            store = FlatVectorStore.from_array(
+                str(tmp_path / f"shard{si}.bin"), part)
+            cfg = _cfg(num_buckets=8, **kw)
+            shards.append(DiskJoinIndex.build(
+                store, cfg, str(tmp_path / f"sh{si}")))
+        return shards
+
+    def test_four_shards_exactly_match_unsharded(self, data, flat_store,
+                                                 tmp_path):
+        """Acceptance: router results over 4 shards == the unsharded
+        index's (id, distance) sets. prune=False + full candidate fan-out
+        makes both paths exact, so equality is strict, not statistical."""
+        x = data
+        exact = dict(prune=False, max_candidates=64)
+        index = _build(flat_store, tmp_path, x, **exact)
+        shards = self._build_shards(x, tmp_path, 4, **exact)
+        router = IndexRouter(shards, scheduler=dict(max_wait_s=0.005))
+        rng = np.random.default_rng(1)
+        for qi in rng.choice(x.shape[0], 24, replace=False):
+            q = x[qi] + 0.001
+            r_ids, r_d = router.query(q)
+            u_ids, u_d = index.query(q)          # unsorted by contract
+            order = np.lexsort((u_ids, u_d))
+            assert r_ids.tolist() == u_ids[order].tolist()
+            np.testing.assert_allclose(r_d, u_d[order], atol=1e-5)
+        router.close()
+        index.close()
+        for s in shards:
+            s.close()
+
+    def test_router_k_and_ordering(self, data, flat_store, tmp_path):
+        x = data
+        shards = self._build_shards(x, tmp_path, 2)
+        router = IndexRouter(shards, scheduler=dict(max_wait_s=0.005))
+        ids, dists = router.query(x[100] + 0.001, k=5)
+        assert len(ids) <= 5
+        assert np.all(np.diff(dists) >= 0)
+        router.close()
+        for s in shards:
+            s.close()
+
+    def test_router_validates_like_shards(self, data, flat_store,
+                                          tmp_path):
+        """A NaN query must raise, not silently route to zero shards."""
+        x = data
+        shards = self._build_shards(x, tmp_path, 2)
+        router = IndexRouter(shards, scheduler=dict(max_wait_s=0.005))
+        bad = x[0].copy()
+        bad[0] = np.nan
+        with pytest.raises(ValueError, match="NaN/Inf"):
+            router.query(bad)
+        with pytest.raises(ValueError, match="incompatible"):
+            router.route(np.zeros(7, np.float32))
+        with pytest.raises(ValueError, match="k must be"):
+            router.submit(x[0], k=-2)
+        router.close()
+        for s in shards:
+            s.close()
+
+    def test_routing_skips_distant_shards(self, tmp_path):
+        """Two well-separated point clouds in separate shards: a query
+        deep inside one never scatters to the other."""
+        rng = np.random.default_rng(5)
+        a = rng.normal(0.0, 0.05, (400, 12)).astype(np.float32)
+        b = (rng.normal(0.0, 0.05, (400, 12)) + 50.0).astype(np.float32)
+        shards = []
+        for name, part in (("a", a), ("b", b)):
+            store = FlatVectorStore.from_array(
+                str(tmp_path / f"{name}.bin"), part)
+            shards.append(DiskJoinIndex.build(
+                store, _cfg(epsilon=0.2, num_buckets=4),
+                str(tmp_path / f"ix_{name}")))
+        router = IndexRouter(shards, scheduler=dict(max_wait_s=0.005))
+        assert router.route(a[0]) == [0]
+        assert router.route(b[0]) == [1]
+        ids, _ = router.query(a[0])
+        assert len(ids) > 0 and int(ids.max()) < 400   # global id space
+        ids_b, _ = router.query(b[0])
+        assert len(ids_b) > 0 and int(ids_b.min()) >= 400
+        snap = router.snapshot()
+        assert snap["fanout_mean"] == 1.0
+        router.close()
+        for s in shards:
+            s.close()
+
+    def test_router_deadline_propagates(self, data, flat_store, tmp_path):
+        x = data
+        shards = self._build_shards(x, tmp_path, 2,
+                                    emulate_read_latency_s=0.02)
+        router = IndexRouter(shards,
+                             scheduler=dict(wave_size=8, max_wait_s=0.05))
+        filler = router.submit(x[0])
+        doomed = router.submit(x[1], deadline_s=1e-4)
+        with pytest.raises(DeadlineExceeded):
+            doomed.result(timeout=30)
+        filler.result(timeout=30)
+        router.close()
+        for s in shards:
+            s.close()
