@@ -14,7 +14,7 @@ from benchmarks import (fig7_baselines, fig8_recall, fig9_memory,
                         fig13_crossjoin, fig14_fragmentation, fig15_io,
                         fig17_ablation, fig18_pruning, fig19_pipeline,
                         fig20_striping, fig21_online, fig22_scheduler,
-                        kernel_roofline, randomness)
+                        fig23_device_pipeline, kernel_roofline, randomness)
 
 MODULES = [
     ("fig7_baselines", fig7_baselines),
@@ -32,6 +32,7 @@ MODULES = [
     ("fig20_striping", fig20_striping),
     ("fig21_online", fig21_online),
     ("fig22_scheduler", fig22_scheduler),
+    ("fig23_device_pipeline", fig23_device_pipeline),
     ("randomness", randomness),
     ("kernel_roofline", kernel_roofline),
 ]

@@ -1,0 +1,448 @@
+"""Verify engines: the executor's batched pair-verification backends.
+
+Both engines replay the same edge stream and produce byte-identical
+(pairs, distances) — they differ only in where operands live and where
+pair extraction happens (``JoinConfig.compute_mode``):
+
+``HostVerifyEngine`` ("host")
+    Stages each batch's operand slabs into a pinned host buffer, runs ONE
+    batched kernel dispatch (Pallas grid or vmapped reference — shared
+    path, ``kernels.ops.verify_pairs_batch``), fetches the full
+    (E, cap, cap) d2/mask arrays and extracts pairs with numpy. Padded
+    batch lanes are *masked out* (sliced away per edge), never filled by
+    replaying edge 0; partial flushes dispatch at the next power-of-two
+    lane count, so a 3-edge final flush pays a 4-lane kernel, not a
+    ``verify_batch``-lane one.
+
+``DeviceVerifyEngine`` ("device")
+    Operands come from a ``DeviceSlabPool`` that mirrors the host cache
+    schedule — each bucket slab crosses H2D once per cache residency, and
+    every further edge reference is a ``device_slab_hit``. Host checkout
+    pins are released at enqueue (the pool holds an independent copy), so
+    pending batches never hold host pool slabs. Dispatch is
+    double-buffered: batch k is issued as ONE asynchronous fused jit
+    (in-program stack → kernel → compaction; first-touch slabs ride the
+    dispatch as plain arguments) and the engine issues no eager device
+    work until batch k's results are collected at the head of flush k+1 —
+    so the entire enqueue/walk/staging of batch k+1 overlaps batch k's
+    kernel (``d2h_overlap_s``). The kernel returns compacted
+    (row, col, distance) triples via an on-device mask → prefix-sum →
+    gather compaction, so the host never materializes an (E, cap, cap)
+    mask and never re-derives sqrt distances.
+
+Distance parity: both modes take d² from the same jitted program and
+apply an IEEE float32 sqrt (numpy on host, XLA on device) — bitwise
+identical. Pair order parity: the compaction scatter walks the mask in
+row-major flat order, exactly ``np.nonzero``'s order.
+
+The compaction capacity (pairs per edge) adapts: a batch whose densest
+edge overflows the current capacity is re-compacted from its still-
+resident d2/mask at the next power of two (the kernel output was sized
+too small, not wrong), and the larger capacity sticks for later batches.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compute.slab_pool import DeviceSlabPool
+from repro.kernels import ops as kops
+
+PAIR_CAP_INIT = 1024  # initial per-edge compaction capacity (pairs)
+
+
+def next_pow2(x: int) -> int:
+    return 1 << max(0, int(x) - 1).bit_length()
+
+
+@functools.partial(jax.jit, static_argnames=("k_cap",))
+def compact_pairs(d2: jax.Array, mask: jax.Array, na: jax.Array,
+                  nb: jax.Array, intra: jax.Array, k_cap: int):
+    """On-device pair compaction: mask → prefix-sum → gather.
+
+    d2/mask: (E, M, N); na/nb: (E,) int32 live-row counts (0 kills a
+    padded batch lane); intra: (E,) bool — keep strictly-upper pairs only
+    (self-join bucket-vs-itself edges). Returns (counts (E,) int32,
+    rows (E, k_cap) int32, cols (E, k_cap) int32, dists (E, k_cap) f32);
+    entries past an edge's count are zeros, pairs past ``k_cap`` are
+    dropped (the caller detects counts > k_cap and re-compacts larger).
+    """
+    E, M, N = d2.shape
+    rows = jax.lax.broadcasted_iota(jnp.int32, (M, N), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (M, N), 1)
+    live = ((rows[None] < na[:, None, None])
+            & (cols[None] < nb[:, None, None]))
+    tri = (~intra)[:, None, None] | (rows[None] < cols[None])
+    m = mask & live & tri
+    flat = m.reshape(E, M * N)
+    counts = jnp.sum(flat, axis=1, dtype=jnp.int32)
+    # prefix-sum + binary search: the j-th pair's flat position is the
+    # first index where the running count reaches j+1 — row-major flat
+    # order == np.nonzero extraction order (host parity). k_cap·log(M·N)
+    # searches vectorize where an XLA scatter would serialize per update
+    # and a full sort would pay M·N·log(M·N).
+    cs = jnp.cumsum(flat, axis=1, dtype=jnp.int32)
+    ks = jnp.arange(1, k_cap + 1, dtype=jnp.int32)
+    order = jax.vmap(lambda c: jnp.searchsorted(c, ks, side="left"))(cs)
+    valid = ks[None, :] <= counts[:, None]
+    order = jnp.minimum(order, M * N - 1)  # clamp past-count sentinels
+    out_r = jnp.where(valid, (order // N).astype(jnp.int32), 0)
+    out_c = jnp.where(valid, (order % N).astype(jnp.int32), 0)
+    out_d2 = jnp.where(
+        valid, jnp.take_along_axis(d2.reshape(E, M * N), order, axis=1),
+        0.0)
+    return counts, out_r, out_c, jnp.sqrt(out_d2)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "k_cap", "use_pallas"))
+def device_verify(na, nb, intra, *slabs, eps: float, k_cap: int,
+                  use_pallas: bool = False):
+    """Fused verify + compaction over individually-resident slabs.
+
+    ``slabs`` is the batch's 2B operand slabs (u lanes then v lanes) as
+    separate arguments: the (B, cap, d) stack happens INSIDE the program,
+    so the whole batch is ONE asynchronous dispatch — an eager
+    ``jnp.stack`` would synchronize with the in-flight previous batch
+    and stall the double buffer. First-touch slabs may arrive as numpy
+    arrays (their H2D rides the dispatch).
+    """
+    B = len(slabs) // 2
+    u = jnp.stack(slabs[:B])
+    v = jnp.stack(slabs[B:])
+    d2, mask = kops.verify_pairs_batch(u, v, eps, use_pallas=use_pallas)
+    counts, out_r, out_c, out_d = compact_pairs(d2, mask, na, nb, intra,
+                                                k_cap)
+    # the stacked operands come back as outputs so the engine can harvest
+    # first-touch lanes into the device slab pool once the batch lands
+    return counts, out_r, out_c, out_d, u, v
+
+
+@functools.partial(jax.jit, static_argnames=("eps2", "k_cap"))
+def query_verify_compact(q_block: jax.Array, qidx: jax.Array, nq,
+                         slab: jax.Array, eps2: float, k_cap: int):
+    """Online point-query verify (``DiskJoinIndex.execute_probes``,
+    ``compute_mode="device"``): the wave's query block is staged on-device
+    ONCE and each probed bucket's verify gathers its member rows from it.
+    ``qidx`` is pow2-padded (bounded recompiles); ``nq`` live entries —
+    padded rows repeat query 0 and are masked out by the row count.
+    Returns compacted (counts (1,), q-rows, cols, distances) against the
+    (capacity, dim) bucket slab."""
+    qs = jnp.take(q_block, qidx, axis=0)             # (Qp, d)
+    from repro.kernels import ref
+    d2 = ref.pairwise_l2(qs, slab)[None]             # (1, Qp, cap)
+    na = jnp.reshape(nq, (1,)).astype(jnp.int32)
+    nb = jnp.full((1,), slab.shape[0], jnp.int32)
+    intra = jnp.zeros((1,), bool)
+    return compact_pairs(d2, d2 <= eps2, na, nb, intra, k_cap)
+
+
+class _EngineBase:
+    """Shared bookkeeping: edge accounting and result accumulation."""
+
+    def __init__(self, cache, *, epsilon: float, capacity_rows: int,
+                 dim: int, verify_batch: int, use_pallas: bool = False,
+                 attribute_mask: np.ndarray | None = None, pstats=None,
+                 xfer_gb_s: float = 0.0):
+        self.cache = cache
+        self.eps = float(epsilon)
+        self.cap = int(capacity_rows)
+        self.dim = int(dim)
+        self.verify_batch = max(1, int(verify_batch))
+        self.use_pallas = bool(use_pallas)
+        self.attribute_mask = attribute_mask
+        self.pstats = pstats
+        self.xfer_gb_s = float(xfer_gb_s)
+        self.dc = 0              # distance computations (live pairs)
+        self.compute_s = 0.0     # engine wall time in stage/dispatch/extract
+        self.pairs_out: list[np.ndarray] = []
+        self.dists_out: list[np.ndarray] = []
+
+    def _count_dc(self, na: int, nb: int, intra: bool) -> None:
+        self.dc += na * (na - 1) // 2 if intra else na * nb
+
+    def _stat(self, field: str, amount) -> None:
+        if self.pstats is not None:
+            self.pstats.add(field, amount)
+
+    def _charge_link(self, nbytes: int) -> None:
+        """Emulated host↔device link cost (``emulate_xfer_gb_s``) — the
+        transfer-volume analogue of the store's emulated read latency."""
+        if self.xfer_gb_s > 0 and nbytes > 0:
+            time.sleep(nbytes / (self.xfer_gb_s * 1e9))
+
+    def results(self) -> tuple[list[np.ndarray], list[np.ndarray]]:
+        return self.pairs_out, self.dists_out
+
+    def evict(self, b: int) -> None:  # device engine overrides
+        pass
+
+    @property
+    def pending(self) -> bool:
+        raise NotImplementedError
+
+
+class HostVerifyEngine(_EngineBase):
+    """Host staging + full-mask fetch (the reference compute path)."""
+
+    def __init__(self, cache, **kw):
+        super().__init__(cache, **kw)
+        self._u = np.empty((self.verify_batch, self.cap, self.dim),
+                           np.float32)
+        self._v = np.empty_like(self._u)
+        self._batch: list[tuple] = []  # (entry_a, entry_b, intra)
+
+    @property
+    def pending(self) -> bool:
+        return bool(self._batch)
+
+    def enqueue(self, bu: int, bv: int, intra: bool) -> None:
+        self._batch.append((self.cache.checkout(bu),
+                            self.cache.checkout(bv), intra))
+        if len(self._batch) >= self.verify_batch:
+            self.flush()
+
+    def flush(self) -> None:
+        if not self._batch:
+            return
+        t0 = time.perf_counter()
+        E = len(self._batch)
+        # partial flushes dispatch at the next pow2 lane count; lanes past
+        # E hold stale staging content and are masked out by the per-edge
+        # extraction below (no edge-0 replay, no duplicate verification)
+        B = min(self.verify_batch, next_pow2(E))
+        for i, (ea, eb, _) in enumerate(self._batch):
+            self._u[i] = ea[0]
+            self._v[i] = eb[0]
+        u = jnp.asarray(self._u[:B])
+        v = jnp.asarray(self._v[:B])
+        staged = 2 * B * self.cap * self.dim * 4
+        self._stat("h2d_transfers", 2)
+        self._stat("h2d_bytes", staged)
+        self._charge_link(staged)
+        d2, mask = kops.verify_pairs_batch(u, v, self.eps,
+                                           use_pallas=self.use_pallas)
+        d2 = np.asarray(d2)
+        masks = np.asarray(mask)
+        self._stat("d2h_bytes", d2.nbytes + masks.nbytes)
+        self._charge_link(d2.nbytes + masks.nbytes)
+        attr = self.attribute_mask
+        for i, (ea, eb, intra) in enumerate(self._batch):
+            na, nb = ea[2], eb[2]
+            m = masks[i][:na, :nb]
+            if intra:
+                m = np.triu(m, k=1)
+            self._count_dc(na, nb, intra)
+            if attr is not None:
+                # slice to the live rows: prefetch-mode id slabs are
+                # capacity-padded with -1 past each bucket's rows
+                m = m & attr[ea[1][:na]][:, None] & attr[eb[1][:nb]][None, :]
+            rows, cols = np.nonzero(m)
+            if rows.size:
+                d = np.sqrt(d2[i][rows, cols])
+                self.pairs_out.append(
+                    np.stack([ea[1][rows], eb[1][cols]],
+                             axis=1).astype(np.int64))
+                self.dists_out.append(d.astype(np.float32))
+        for ea, eb, _ in self._batch:  # drop the batch's slab pins
+            self.cache.release(ea)
+            self.cache.release(eb)
+        self._batch.clear()
+        self.compute_s += time.perf_counter() - t0
+
+    def finish(self) -> None:
+        self.flush()
+
+    def abort(self) -> None:
+        # an exception mid-run leaves checkout pins in the pending batch;
+        # on a shared (session) pool they would leak for the session's
+        # lifetime and starve the next join's liveness floor
+        for ea, eb, _ in self._batch:
+            self.cache.release(ea)
+            self.cache.release(eb)
+        self._batch.clear()
+
+
+class DeviceVerifyEngine(_EngineBase):
+    """Device-resident operands + double-buffered compacted dispatch."""
+
+    def __init__(self, cache, **kw):
+        pair_cap = kw.pop("pair_cap", None)
+        super().__init__(cache, **kw)
+        # slab transfers accrue link debt paid in one sleep per flush:
+        # hundreds of sub-millisecond sleeps would each round up to the
+        # OS timer slack and dwarf the modeled cost
+        self._link_debt = 0
+        self.pool = DeviceSlabPool(self.pstats,
+                                   on_transfer=self._defer_link_charge)
+        self._batch: list[tuple] = []
+        self._inflight: tuple | None = None
+        # start the compaction capacity at ~8 pairs per slab row: dense
+        # enough that overflow re-compaction (and its recompile) is rare,
+        # small enough that the compacted D2H stays ≪ the full mask
+        cap2 = self.cap * self.cap
+        self.pair_cap = min(
+            next_pow2(pair_cap or max(PAIR_CAP_INIT, 8 * self.cap)), cap2)
+
+    @property
+    def pending(self) -> bool:
+        # only a staged (undispatched) batch counts: in-flight batches
+        # hold no host pins, so a stall-flush has nothing to release
+        return bool(self._batch)
+
+    def evict(self, b: int) -> None:
+        self.pool.evict(b)
+
+    def enqueue(self, bu: int, bv: int, intra: bool) -> None:
+        ea = self.cache.checkout(bu)
+        eb = self.cache.checkout(bv)
+        try:
+            da = self.pool.operand(bu, ea[0])
+            db = self.pool.operand(bv, eb[0])
+            # id sidecars live in recyclable pool slots: copy the live
+            # rows so the pins can drop now (the pool operand is already
+            # an independent copy)
+            meta = (np.array(ea[1][:ea[2]]), ea[2],
+                    np.array(eb[1][:eb[2]]), eb[2], intra)
+        finally:
+            self.cache.release(ea)
+            self.cache.release(eb)
+        self._batch.append((da, db, bu, bv, meta))
+        if len(self._batch) >= self.verify_batch:
+            self.flush()
+
+    def flush(self) -> None:
+        """Collect the in-flight batch, then dispatch the staged one
+        asynchronously. Between this dispatch and the next collect the
+        engine issues NO eager device work — on single-stream backends
+        any eager op would synchronize with the running kernel — so the
+        whole enqueue/walk of the next batch overlaps this one's kernel
+        (double buffering)."""
+        if not self._batch:
+            return
+        if self._link_debt:
+            # pay accrued transfer debt while the previous batch's kernel
+            # is still in flight — on real hardware the DMA overlaps
+            # compute, so the modeled link time overlaps it here too
+            self._charge_link(self._link_debt)
+            self._link_debt = 0
+        self._collect()        # previous batch; drains the device queue
+        t0 = time.perf_counter()
+        E = len(self._batch)
+        B = min(self.verify_batch, next_pow2(E))
+
+        def fresh(b, captured):
+            # operands were captured at enqueue, possibly before the
+            # previous batch's harvest: re-query the pool so a bucket
+            # harvested since then rides as a device array instead of
+            # re-transferring its staged host copy
+            cur = self.pool.current(b)
+            return captured if cur is None else cur
+
+        ops_u = [fresh(bu, da) for da, _, bu, _, _ in self._batch]
+        ops_v = [fresh(bv, db) for _, db, _, bv, _ in self._batch]
+        slabs = (ops_u + [ops_u[0]] * (B - E)
+                 + ops_v + [ops_v[0]] * (B - E))
+        # na = nb = 0 masks the pad lanes out inside the compaction
+        na = np.zeros(B, np.int32)
+        nb = np.zeros(B, np.int32)
+        intra = np.zeros(B, bool)
+        metas = []
+        harvest: list[tuple[int, int, int]] = []  # (bucket, side, lane)
+        staged: set[int] = set()
+        for i, (_, _, bu, bv, (ids_a, n_a, ids_b, n_b, is_intra)) \
+                in enumerate(self._batch):
+            na[i], nb[i], intra[i] = n_a, n_b, is_intra
+            metas.append((ids_a, ids_b))
+            self._count_dc(n_a, n_b, is_intra)
+            if bu not in staged and self.pool.needs_harvest(bu):
+                harvest.append((bu, 0, i))
+                staged.add(bu)
+            if bv not in staged and self.pool.needs_harvest(bv):
+                harvest.append((bv, 1, i))
+                staged.add(bv)
+        k_cap = self.pair_cap
+        out = device_verify(na, nb, intra, *slabs, eps=self.eps,
+                            k_cap=k_cap, use_pallas=self.use_pallas)
+        self._batch.clear()
+        self._stat("device_batches", 1)
+        self._inflight = (out, slabs, na, nb, intra, metas, harvest,
+                          k_cap, time.perf_counter())
+        self.compute_s += time.perf_counter() - t0
+
+    def _defer_link_charge(self, nbytes: int) -> None:
+        self._link_debt += nbytes
+
+    def _collect(self) -> None:
+        if self._inflight is None:
+            return
+        (out, slabs, na, nb, intra, metas, harvest, k_cap,
+         t_dispatch) = self._inflight
+        self._inflight = None
+        t0 = time.perf_counter()
+        # host time since dispatch ran concurrently with the kernel
+        self._stat("d2h_overlap_s", max(0.0, t0 - t_dispatch))
+        counts = np.asarray(out[0])
+        top = int(counts.max()) if counts.size else 0
+        if top > k_cap:
+            # capacity overflow: the kernel output was sized too small,
+            # not wrong — re-dispatch at the next pow2, which sticks
+            k_cap = min(next_pow2(top), self.cap * self.cap)
+            self.pair_cap = max(self.pair_cap, k_cap)
+            self._stat("device_compact_overflows", 1)
+            out = device_verify(na, nb, intra, *slabs, eps=self.eps,
+                                k_cap=k_cap, use_pallas=self.use_pallas)
+            counts = np.asarray(out[0])
+        # the queue is idle now: slice first-touch lanes out of the
+        # stacked operands into the pool (device-resident for later
+        # batches of this residency)
+        for b, side, lane in harvest:
+            self.pool.harvest(b, out[4 + side][lane])
+        rows = np.asarray(out[1])
+        cols = np.asarray(out[2])
+        dists = np.asarray(out[3])
+        fetched = counts.nbytes + rows.nbytes + cols.nbytes + dists.nbytes
+        self._stat("d2h_bytes", fetched)
+        self._charge_link(fetched)
+        attr = self.attribute_mask
+        for i, (ids_a, ids_b) in enumerate(metas):
+            k = int(counts[i])
+            if k == 0:
+                continue
+            pa = ids_a[rows[i, :k]]
+            pb = ids_b[cols[i, :k]]
+            d = dists[i, :k]
+            if attr is not None:
+                keep = attr[pa] & attr[pb]
+                pa, pb, d = pa[keep], pb[keep], d[keep]
+                if pa.size == 0:
+                    continue
+            self.pairs_out.append(np.stack([pa, pb], axis=1)
+                                  .astype(np.int64))
+            self.dists_out.append(d.astype(np.float32))
+        self.compute_s += time.perf_counter() - t0
+
+    def finish(self) -> None:
+        self.flush()
+        self._collect()
+
+    def abort(self) -> None:
+        self._batch.clear()
+        self._inflight = None
+        self.pool.clear()
+
+
+def make_verify_engine(config, cache, capacity_rows: int, dim: int,
+                       attribute_mask=None, pstats=None):
+    """Engine per ``JoinConfig.compute_mode`` ("host" | "device")."""
+    cls = (DeviceVerifyEngine if config.compute_mode == "device"
+           else HostVerifyEngine)
+    return cls(cache, epsilon=float(config.epsilon),
+               capacity_rows=capacity_rows, dim=dim,
+               verify_batch=int(config.verify_batch),
+               use_pallas=bool(config.use_pallas),
+               attribute_mask=attribute_mask, pstats=pstats,
+               xfer_gb_s=float(config.emulate_xfer_gb_s))

@@ -1,0 +1,103 @@
+"""Device-resident bucket slab pool: one H2D transfer per cache residency.
+
+The host ``BufferPool`` already guarantees each bucket is *read* once per
+cache residency; this pool extends the same discipline one hop down the
+pipeline: each bucket slab crosses H2D ONCE per residency, and every edge
+that touches the bucket while it stays resident verifies against the
+*already-resident* device operand instead of re-staging the slab.
+Eviction mirrors the host cache schedule (the executor forwards its
+scheduled ``evict`` calls), so device memory tracks the same
+Belady-bounded working set the host budget allows — a re-load after
+eviction is a new residency and pays one new transfer.
+
+Transfer staging is *deferred*: ``operand`` takes a private host copy
+(the source slab lives in a recyclable ``BufferPool`` slot) and the copy
+rides the next fused kernel dispatch as a plain array argument. An eager
+``jax.device_put`` here would synchronize with the in-flight previous
+batch on single-stream backends and serialize the double buffer; on real
+accelerators the argument transfer is the same async DMA. Once the batch
+completes, the engine ``harvest``s the device-resident stack slice back
+into the pool, so later batches pass a true device array.
+
+Pending verify batches keep evicted slabs alive through their own
+references (host copies and immutable JAX arrays alike), so eviction
+never races an in-flight kernel — the device analogue of the host pool's
+pin refcounts.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class DeviceSlabPool:
+    """bucket id → device-resident (capacity, dim) float32 operand."""
+
+    def __init__(self, stats=None, on_transfer=None):
+        # bucket -> [device array | None, staged host copy | None]
+        self._slabs: dict[int, list] = {}
+        self.stats = stats
+        self.on_transfer = on_transfer  # e.g. emulated-link charge (bytes)
+        self.transfers = 0       # H2D slab transfers (== residencies used)
+        self.hits = 0            # operand lookups served pool-resident
+        self.h2d_bytes = 0
+
+    def __contains__(self, b: int) -> bool:
+        return b in self._slabs
+
+    @property
+    def resident(self) -> int:
+        return len(self._slabs)
+
+    def operand(self, b: int, host_vecs: np.ndarray):
+        """Operand for bucket ``b``: the harvested device array, or —
+        on this residency's first touch — a freshly staged host copy
+        whose transfer rides the next dispatch. ``host_vecs`` must be
+        the bucket's full padded slab (only consulted on a miss)."""
+        ent = self._slabs.get(b)
+        if ent is not None:
+            self.hits += 1
+            if self.stats is not None:
+                self.stats.add("device_slab_hits", 1)
+                self.stats.add("h2d_transfers_saved", 1)
+            return ent[0] if ent[0] is not None else ent[1]
+        host = np.array(host_vecs, np.float32)
+        self._slabs[b] = [None, host]
+        self.transfers += 1
+        self.h2d_bytes += int(host.nbytes)
+        if self.stats is not None:
+            self.stats.add("h2d_transfers", 1)
+            self.stats.add("h2d_bytes", int(host.nbytes))
+        if self.on_transfer is not None:
+            self.on_transfer(int(host.nbytes))
+        return host
+
+    def current(self, b: int):
+        """Freshest operand for a resident bucket (device array once
+        harvested, else the staged host copy), or None if not resident —
+        dispatchers re-query this at flush so batches staged before a
+        harvest still pass the device-resident array."""
+        ent = self._slabs.get(b)
+        if ent is None:
+            return None
+        return ent[0] if ent[0] is not None else ent[1]
+
+    def needs_harvest(self, b: int) -> bool:
+        ent = self._slabs.get(b)
+        return ent is not None and ent[0] is None
+
+    def harvest(self, b: int, dev) -> None:
+        """Install the device-resident array for a staged bucket (the
+        engine slices it out of a completed batch's stacked operand).
+        The host staging copy is dropped — later batches pass ``dev``."""
+        ent = self._slabs.get(b)
+        if ent is not None and ent[0] is None:
+            ent[0] = dev
+            ent[1] = None
+
+    def evict(self, b: int) -> None:
+        """Mirror a host-cache eviction. In-flight batches that captured
+        the operand keep it alive; the next residency transfers afresh."""
+        self._slabs.pop(b, None)
+
+    def clear(self) -> None:
+        self._slabs.clear()

@@ -4,7 +4,9 @@ Shared by the deprecated one-shot ``similarity_cross_join`` wrapper and
 ``DiskJoinIndex.cross_join``: builds the bipartite candidate graph over two
 bucketings (center search + Eq. 1 + probabilistic pruning), presents the
 two bucketed stores as one combined bucket-id space, and reuses the
-self-join executor with intra-bucket pairs disabled.
+self-join executor with intra-bucket pairs disabled — including its verify
+engines (``JoinConfig.compute_mode``): in device mode each side's slabs
+cross H2D once per cache residency of the *combined* id space.
 """
 from __future__ import annotations
 

@@ -46,6 +46,22 @@ def verify_edges(slab: jax.Array, edges: jax.Array, eps2: float):
     return jnp.sum(mask, axis=(1, 2)), mask
 
 
+@partial(jax.jit, static_argnames=("eps2", "k_cap"))
+def verify_edges_compact(slab: jax.Array, edges: jax.Array, na: jax.Array,
+                         nb: jax.Array, intra: jax.Array, eps2: float,
+                         k_cap: int):
+    """Compacted variant (``compute_mode="device"``): instead of shipping
+    the full (E, cap, cap) mask back to the host, pairs are compacted
+    on-device (``repro.compute.compact_pairs``) — D2H shrinks from
+    E·cap² bytes to E·(1 + 3·k_cap) values. ``na``/``nb`` carry the
+    live-row counts (0 masks a padding lane out entirely)."""
+    from repro.compute import compact_pairs
+    u = jnp.take(slab, edges[:, 0], axis=0)
+    v = jnp.take(slab, edges[:, 1], axis=0)
+    d2 = jax.vmap(ref.pairwise_l2)(u, v)
+    return compact_pairs(d2, d2 <= eps2, na, nb, intra, k_cap)
+
+
 @dataclasses.dataclass
 class Superstep:
     bucket_ids: np.ndarray   # (W,) global bucket ids in this window
@@ -124,22 +140,39 @@ class DistributedJoin:
         self.cache_buckets = resolve_cache_buckets(config, self.cap,
                                                    store.dim)
         self._host_cache: dict[int, np.ndarray] = {}
+        self._staged: dict[int, tuple] = {}  # prefetched, not yet fetched
         self.loads = 0
         self.hits = 0
+        self.prefetched = 0  # window w+1 loads issued under w's verify
+        # compute_mode="device": per-bucket device slabs persist across
+        # supersteps (evicted on the host keep-set), so consecutive
+        # windows re-transfer only their *new* buckets instead of
+        # device_put-ing the whole window slab every superstep
+        from repro.compute import DeviceSlabPool, next_pow2
+        self._dev_pool = (DeviceSlabPool() if config.compute_mode == "device"
+                          else None)
+        self._next_pow2 = next_pow2
+        self._pair_cap = min(next_pow2(max(1024, 8 * self.cap)),
+                             self.cap * self.cap)
 
-    def _fetch(self, b: int) -> tuple[np.ndarray, np.ndarray, int]:
-        if b in self._host_cache:
-            self.hits += 1
-            return self._host_cache[b]
+    def _read_padded(self, b: int) -> tuple[np.ndarray, np.ndarray, int]:
         vecs, ids = self.store.read_bucket(b)
         n = vecs.shape[0]
         pad = self.cap - n
         if pad > 0:
             vecs = np.concatenate(
                 [vecs, np.full((pad, vecs.shape[1]), PAD_COORD, vecs.dtype)])
-        entry = (vecs.astype(np.float32), ids, n)
+        return (vecs.astype(np.float32), ids, n)
+
+    def _fetch(self, b: int) -> tuple[np.ndarray, np.ndarray, int]:
+        if b in self._host_cache:
+            self.hits += 1
+            return self._host_cache[b]
+        entry = self._staged.pop(b, None)
+        if entry is None:            # not prefetched: load now
+            entry = self._read_padded(b)
+            self.loads += 1          # prefetched loads were counted at issue
         self._host_cache[b] = entry
-        self.loads += 1
         return entry
 
     def _evict_to(self, keep: set[int]) -> None:
@@ -151,6 +184,74 @@ class DistributedJoin:
         for b in list(self._host_cache.keys()):
             if b not in keep and len(self._host_cache) > self.cache_buckets:
                 del self._host_cache[b]
+                if self._dev_pool is not None:
+                    self._dev_pool.evict(b)  # device mirrors host residency
+
+    def _prefetch_window(self, step: "Superstep") -> None:
+        """ROADMAP "prefetch for the distributed join": while window w's
+        verify runs on-device (async dispatch), pull window w+1's missing
+        buckets from disk. They land in a *staging* dict, not the host
+        cache: staged entries must not add eviction pressure before
+        window w's keep-set trim runs, or gap-retained buckets (kept by
+        PR 2's upcoming-window keep-set) would be pushed out early and
+        re-read. ``_fetch`` merges staged entries in when w+1 begins."""
+        for b in step.bucket_ids:
+            b = int(b)
+            if b not in self._host_cache and b not in self._staged:
+                self._staged[b] = self._read_padded(b)
+                self.loads += 1
+                self.prefetched += 1
+
+    def _dispatch_compact(self, slab, edges, entries, eps2, sharding):
+        """Issue the compacted verify for one superstep (async). Edge
+        count pads to the next pow2 (bounded recompiles) and, under a
+        mesh, to a shard multiple; pad lanes carry na = nb = 0 so the
+        compaction masks them out entirely."""
+        E = edges.shape[0]
+        Ep = self._next_pow2(E)
+        if sharding is not None:
+            Ep = _round_up(Ep, self.mesh.shape["data"])
+        pe = edges
+        if Ep != E:
+            pe = np.concatenate([edges, np.zeros((Ep - E, 2), edges.dtype)])
+        rowc = np.array([e[2] for e in entries], np.int32)
+        na = np.zeros(Ep, np.int32)
+        nb = np.zeros(Ep, np.int32)
+        na[:E] = rowc[edges[:, 0]]
+        nb[:E] = rowc[edges[:, 1]]
+        intra = np.zeros(Ep, bool)
+        intra[:E] = edges[:, 0] == edges[:, 1]
+        edges_dev = jnp.asarray(pe)
+        if sharding is not None:
+            edges_dev = jax.device_put(edges_dev, sharding)
+        out = verify_edges_compact(slab, edges_dev, jnp.asarray(na),
+                                   jnp.asarray(nb), jnp.asarray(intra),
+                                   eps2, self._pair_cap)
+        return out, na, nb, intra, edges_dev
+
+    def _extract_compact(self, handle, slab, edges, entries, eps2):
+        """Fetch a superstep's compacted pairs; on per-edge capacity
+        overflow re-dispatch at the next pow2 (sticky for later steps)."""
+        out, na, nb, intra, edges_dev = handle
+        E = edges.shape[0]
+        counts = np.asarray(out[0])
+        top = int(counts[:E].max()) if E else 0
+        if top > self._pair_cap:
+            self._pair_cap = min(self._next_pow2(top), self.cap * self.cap)
+            out = verify_edges_compact(slab, edges_dev, jnp.asarray(na),
+                                       jnp.asarray(nb), jnp.asarray(intra),
+                                       eps2, self._pair_cap)
+            counts = np.asarray(out[0])
+        rows_c = np.asarray(out[1])
+        cols_c = np.asarray(out[2])
+        res = []
+        for ei, (a, b) in enumerate(edges):
+            k = int(counts[ei])
+            if k:
+                ida, idb = entries[a][1], entries[b][1]
+                res.append(np.stack([ida[rows_c[ei, :k]],
+                                     idb[cols_c[ei, :k]]], axis=1))
+        return res
 
     def run(self, graph: BucketGraph):
         eps2 = float(self.config.epsilon) ** 2
@@ -168,36 +269,61 @@ class DistributedJoin:
             if edges.shape[0] == 0:
                 continue  # defensive: planner always pairs buckets w/ edges
             entries = [self._fetch(int(b)) for b in step.bucket_ids]
-            slab = jnp.asarray(np.stack([e[0] for e in entries]))
-            # pad edge count to shard evenly; padding repeats edge 0 whose
-            # results are sliced off
             E = edges.shape[0]
-            if sharding is not None:
-                n_shards = self.mesh.shape["data"]
-                Ep = _round_up(E, n_shards)
-                if Ep != E:
-                    edges = np.concatenate(
-                        [edges, np.repeat(edges[:1], Ep - E, axis=0)])
-                edges_dev = jax.device_put(jnp.asarray(edges), sharding)
+            if self._dev_pool is not None:
+                # device mode: the window slab is a stack of per-bucket
+                # slabs already resident on-device (one transfer per host
+                # residency), and the verify returns compacted pairs
+                slab = jnp.stack(
+                    [self._dev_pool.operand(int(b), e[0])
+                     for b, e in zip(step.bucket_ids, entries)])
+                # harvest this window's first-touch buckets as device-
+                # resident slices NOW (queue idle): the next overlapping
+                # window then stacks device arrays instead of
+                # re-transferring staged host copies
+                for wi, b in enumerate(step.bucket_ids):
+                    if self._dev_pool.needs_harvest(int(b)):
+                        self._dev_pool.harvest(int(b), slab[wi])
+                out = self._dispatch_compact(slab, edges, entries,
+                                             eps2, sharding)
             else:
-                edges_dev = jnp.asarray(edges)
-            counts, mask = verify_edges(slab, edges_dev, eps2)
-            mask = np.asarray(mask)[:E]
+                slab = jnp.asarray(np.stack([e[0] for e in entries]))
+                # pad edge count to shard evenly; padding repeats edge 0
+                # whose results are sliced off
+                pe = edges
+                if sharding is not None:
+                    n_shards = self.mesh.shape["data"]
+                    Ep = _round_up(E, n_shards)
+                    if Ep != E:
+                        pe = np.concatenate(
+                            [edges, np.repeat(edges[:1], Ep - E, axis=0)])
+                    edges_dev = jax.device_put(jnp.asarray(pe), sharding)
+                else:
+                    edges_dev = jnp.asarray(pe)
+                out = verify_edges(slab, edges_dev, eps2)
+            # verify is dispatched asynchronously: pull window w+1's
+            # missing buckets from disk while this window's kernel runs
+            if si + 1 < len(steps):
+                self._prefetch_window(steps[si + 1])
             dc += sum(
                 (entries[a][2] * entries[b][2]) if a != b
                 else entries[a][2] * (entries[a][2] - 1) // 2
-                for a, b in edges[:E])
-            d2 = None
-            for ei, (a, b) in enumerate(edges[:E]):
-                na, nb = entries[a][2], entries[b][2]
-                m = mask[ei][:na, :nb]
-                if a == b:
-                    m = np.triu(m, k=1)
-                rows, cols = np.nonzero(m)
-                if rows.size:
-                    ida, idb = entries[a][1], entries[b][1]
-                    pairs_out.append(
-                        np.stack([ida[rows], idb[cols]], axis=1))
+                for a, b in edges)
+            if self._dev_pool is not None:
+                pairs_out.extend(
+                    self._extract_compact(out, slab, edges, entries, eps2))
+            else:
+                mask = np.asarray(out[1])[:E]
+                for ei, (a, b) in enumerate(edges):
+                    na, nb = entries[a][2], entries[b][2]
+                    m = mask[ei][:na, :nb]
+                    if a == b:
+                        m = np.triu(m, k=1)
+                    rows, cols = np.nonzero(m)
+                    if rows.size:
+                        ida, idb = entries[a][1], entries[b][1]
+                        pairs_out.append(
+                            np.stack([ida[rows], idb[cols]], axis=1))
             # keep-set is the *upcoming* window: evicting on the finished
             # window's set discards exactly the slabs superstep w+1 reuses
             # (e.g. buckets loaded in w-1 that skip w and return in w+1),
@@ -213,6 +339,11 @@ class DistributedJoin:
             pairs, _ = dedup_pairs(np.concatenate(pairs_out))
         else:
             pairs = np.zeros((0, 2), np.int64)
-        return pairs, {"supersteps": len(steps), "host_loads": self.loads,
-                       "host_hits": self.hits,
-                       "distance_computations": dc}
+        info = {"supersteps": len(steps), "host_loads": self.loads,
+                "host_hits": self.hits, "prefetched_buckets": self.prefetched,
+                "distance_computations": dc}
+        if self._dev_pool is not None:
+            info["h2d_transfers"] = self._dev_pool.transfers
+            info["device_slab_hits"] = self._dev_pool.hits
+            info["h2d_bytes"] = self._dev_pool.h2d_bytes
+        return pairs, info

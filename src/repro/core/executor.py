@@ -9,43 +9,38 @@ Fixed shapes: every bucket is padded to ``bucket_capacity`` rows (MXU-
 aligned) so the verify kernel compiles exactly once. Padded rows sit at +∞
 distance (coordinates 1e15) and can never pass the ε threshold.
 
-Batched dispatch: edges are accumulated into fixed-size batches and verified
-with one vmapped kernel call (cache-evicted slabs stay alive via the pending
-batch's references — Python refs in sync mode, buffer-pool pins in prefetch
-mode — so batching never races the eviction schedule).
+Batched dispatch: edges are accumulated into ``JoinConfig.verify_batch``-
+sized batches and verified by a verify engine (``repro.compute``) with one
+batched kernel call per flush (cache-evicted slabs stay alive via the
+pending batch's references — Python refs in sync mode, buffer-pool pins in
+prefetch mode, immutable device arrays in device compute mode — so
+batching never races the eviction schedule).
 
 I/O modes (``JoinConfig.io_mode``): ``"sync"`` reads every missed bucket
 inline; ``"prefetch"`` consumes slabs from ``repro.io``'s schedule-driven
-prefetcher, overlapping SSD reads with verification. Both replay the same
-cache schedule, so the verified pair set is identical.
+prefetcher, overlapping SSD reads with verification.
+
+Compute modes (``JoinConfig.compute_mode``): ``"host"`` stages operands
+per batch and extracts pairs from fetched masks; ``"device"`` keeps slabs
+device-resident per cache residency, double-buffers dispatch and
+compacts pairs on-device (``repro.compute``). All four combinations
+replay the same cache schedule and produce byte-identical results.
 """
 from __future__ import annotations
 
-import functools
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.compute import make_verify_engine
 from repro.core import cache as cache_mod
 from repro.core import ordering
 from repro.core.types import (BucketGraph, BucketMeta, JoinConfig,
                               JoinResult, dedup_pairs,
                               resolve_bucket_capacity, resolve_cache_buckets)
-from repro.kernels import ops as kops
-from repro.kernels import ref as kref
 from repro.store.vector_store import BucketedVectorStore
 
 PAD_COORD = 1e15  # padded rows: astronomically far from everything
-VERIFY_BATCH = 32  # edges per batched kernel dispatch
-
-
-@functools.partial(jax.jit, static_argnames=("eps2",))
-def _verify_batch(u: jax.Array, v: jax.Array, eps2: float) -> jax.Array:
-    """(E, cap, d) × (E, cap, d) → bool mask (E, cap, cap)."""
-    d2 = jax.vmap(kref.pairwise_l2)(u, v)
-    return d2 <= eps2
 
 
 class BucketCache:
@@ -154,8 +149,13 @@ class JoinExecutor:
     def _make_cache(self, schedule):
         """Cache backend per JoinConfig.io_mode (+ pipeline stats or None)."""
         if self.config.io_mode != "prefetch":
-            return (BucketCache(self.store, self.bucket_capacity),
-                    self.shared_stats)
+            stats = self.shared_stats
+            if stats is None and self.config.compute_mode == "device":
+                # device telemetry (h2d/compaction counters) needs a
+                # stats surface even without the prefetch pipeline
+                from repro.io import PipelineStats
+                stats = PipelineStats()
+            return BucketCache(self.store, self.bucket_capacity), stats
         from repro.io import PipelineStats, PrefetchedBucketCache
         cap_buckets = min(self.cache_buckets, self.meta.num_buckets or 1)
         pool_slabs = self.config.io_pool_slabs
@@ -186,20 +186,15 @@ class JoinExecutor:
         # report per-run numbers: diff against a baseline at the end
         pstats_base = (pstats.snapshot() if pstats is not None
                        and self.shared_stats is not None else None)
-        eps = float(self.config.epsilon)
-
-        pairs_out: list[np.ndarray] = []
-        dists_out: list[np.ndarray] = []
-        dc = 0
+        engine = make_verify_engine(self.config, cache,
+                                    self.bucket_capacity, self.store.dim,
+                                    attribute_mask=self.attribute_mask,
+                                    pstats=pstats)
 
         t0 = time.perf_counter()
         ai = 0  # index into access_seq / schedule.actions
         actions = schedule.actions
-        eps2 = eps * eps
-        cap = self.bucket_capacity
-        batch: list[tuple] = []  # (entry_a, entry_b, is_intra)
         io_wait = 0.0   # executor time blocked in cache.load
-        compute_t = 0.0  # executor time in verify/flush
 
         def ensure(b: int) -> None:
             nonlocal io_wait
@@ -210,68 +205,16 @@ class JoinExecutor:
             if not is_hit:
                 if victim is not None:
                     cache.evict(victim)
+                    engine.evict(victim)
                 if not cache.load_issued:
                     # prefetcher is behind AND may be blocked on the pool:
                     # flush pending pins so a slab frees up (liveness)
-                    if batch and pstats is not None:
+                    if engine.pending and pstats is not None:
                         pstats.add("flush_on_stall", 1)
-                    flush()
+                    engine.flush()
                 t0 = time.perf_counter()
                 cache.load(b)
                 io_wait += time.perf_counter() - t0
-
-        def flush() -> None:
-            nonlocal dc, compute_t
-            if not batch:
-                return
-            t_flush = time.perf_counter()
-            E = len(batch)
-            u = np.empty((VERIFY_BATCH, cap, self.store.dim), np.float32)
-            v = np.empty_like(u)
-            for i, (ea, eb, _) in enumerate(batch):
-                u[i] = ea[0]
-                v[i] = eb[0]
-            for i in range(E, VERIFY_BATCH):  # pad batch: replay edge 0
-                u[i] = batch[0][0][0]
-                v[i] = batch[0][1][0]
-            if self.config.use_pallas:
-                masks = np.stack([
-                    np.asarray(kops.pairwise_l2_threshold(
-                        u[i], v[i], eps, use_pallas=True)[1])
-                    for i in range(E)])
-            else:
-                masks = np.asarray(_verify_batch(jnp.asarray(u),
-                                                 jnp.asarray(v), eps2))[:E]
-            for i, (ea, eb, intra) in enumerate(batch):
-                na, nb = ea[2], eb[2]
-                m = masks[i][:na, :nb]
-                if intra:
-                    m = np.triu(m, k=1)
-                    dc += na * (na - 1) // 2
-                else:
-                    dc += na * nb
-                if self.attribute_mask is not None:
-                    # slice to the live rows: prefetch-mode id slabs are
-                    # capacity-padded with -1 past each bucket's rows
-                    m = m & self.attribute_mask[ea[1][:na]][:, None] \
-                          & self.attribute_mask[eb[1][:nb]][None, :]
-                rows, cols = np.nonzero(m)
-                if rows.size:
-                    diff = ea[0][rows] - eb[0][cols]
-                    d = np.sqrt(np.sum(diff * diff, axis=1))
-                    pairs_out.append(np.stack([ea[1][rows], eb[1][cols]],
-                                              axis=1).astype(np.int64))
-                    dists_out.append(d.astype(np.float32))
-            for ea, eb, _ in batch:  # drop the batch's slab pins
-                cache.release(ea)
-                cache.release(eb)
-            batch.clear()
-            compute_t += time.perf_counter() - t_flush
-
-        def enqueue(bu: int, bv: int, intra: bool) -> None:
-            batch.append((cache.checkout(bu), cache.checkout(bv), intra))
-            if len(batch) >= VERIFY_BATCH:
-                flush()
 
         try:
             for task in tasks:
@@ -279,27 +222,23 @@ class JoinExecutor:
                     b = int(task[1])
                     ensure(b)
                     if self.intra_join and cache.rows(b) >= 2:
-                        enqueue(b, b, True)
+                        engine.enqueue(b, b, True)
                 else:
                     _, u, v = task
                     ensure(int(u))
                     ensure(int(v))
-                    enqueue(int(u), int(v), False)
-            flush()
+                    engine.enqueue(int(u), int(v), False)
+            engine.finish()
         finally:
-            # an exception mid-run leaves checkout pins in the pending
-            # batch; on a shared (session) pool they would leak for the
-            # session's lifetime and starve the next join's liveness floor
-            for ea, eb, _ in batch:
-                cache.release(ea)
-                cache.release(eb)
-            batch.clear()
+            engine.abort()
             cache.close()
         exec_seconds = time.perf_counter() - t0
+        compute_t = engine.compute_s  # engine time in stage/dispatch/extract
 
-        if pairs_out:
-            pairs, dists = dedup_pairs(np.concatenate(pairs_out),
-                                       np.concatenate(dists_out))
+        pairs_list, dists_list = engine.results()
+        if pairs_list:
+            pairs, dists = dedup_pairs(np.concatenate(pairs_list),
+                                       np.concatenate(dists_list))
         else:
             pairs = np.zeros((0, 2), np.int64)
             dists = np.zeros(0, np.float32)
@@ -321,7 +260,7 @@ class JoinExecutor:
         from repro.core.bucket_graph import candidate_pair_count
         return JoinResult(
             pairs=pairs, distances=dists,
-            num_distance_computations=dc,
+            num_distance_computations=engine.dc,
             num_candidate_pairs=candidate_pair_count(graph, self.meta),
             cache_hits=schedule.hits, cache_misses=schedule.misses,
             bucket_loads=cache.loads,

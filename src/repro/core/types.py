@@ -22,6 +22,14 @@ from typing import Optional
 import numpy as np
 
 
+def _validate_compute(compute_mode: str, verify_batch: int) -> None:
+    if compute_mode not in ("host", "device"):
+        raise ValueError(f"compute_mode must be 'host' or 'device', "
+                         f"got {compute_mode!r}")
+    if verify_batch < 1:
+        raise ValueError(f"verify_batch must be >= 1, got {verify_batch}")
+
+
 def _resolve_num_buckets(num_buckets: Optional[int], num_vectors: int) -> int:
     if num_buckets is not None:
         return max(2, min(num_buckets, num_vectors))
@@ -78,6 +86,22 @@ class JoinConfig:
       emulate_read_latency_s: per-bucket-read sleep applied to the
         bucketed store — restores the paper's SSD-latency-bound regime on
         page-cached memmaps (benchmarks only; 0 disables).
+      compute_mode: "host" stages each verify batch from host slabs and
+        extracts pairs from a fetched boolean mask; "device" mirrors the
+        cache schedule on the accelerator (``repro.compute``): every
+        bucket slab is transferred ONCE per cache residency into a device
+        slab pool, dispatch is double-buffered, and the kernel returns
+        compacted (row, col, distance) triples. Result pairs/distances
+        are byte-identical between the modes.
+      verify_batch: edges per batched verify-kernel dispatch (>= 1).
+        Larger batches amortize dispatch overhead; smaller ones bound the
+        slab pins a pending batch holds.
+      emulate_xfer_gb_s: emulated host↔device link bandwidth (GB/s)
+        charged against the verify engines' transfer volumes — restores
+        the accelerator-attached regime (where staging bytes cost wall
+        time) on hosts whose "device" is the same memory, exactly as
+        ``emulate_read_latency_s`` restores the SSD regime on page-cached
+        memmaps (benchmarks only; 0 disables).
     """
 
     epsilon: float
@@ -104,6 +128,9 @@ class JoinConfig:
     io_batch_reads: bool = False
     io_coalesce: bool = False
     emulate_read_latency_s: float = 0.0
+    compute_mode: str = "host"
+    verify_batch: int = 32
+    emulate_xfer_gb_s: float = 0.0
 
     def __post_init__(self):
         if self.io_mode not in ("sync", "prefetch"):
@@ -114,6 +141,7 @@ class JoinConfig:
         if self.io_stripe_by not in ("phase", "hash"):
             raise ValueError(f"io_stripe_by must be 'phase' or 'hash', "
                              f"got {self.io_stripe_by!r}")
+        _validate_compute(self.compute_mode, self.verify_batch)
 
     def resolve_num_buckets(self, num_vectors: int) -> int:
         return _resolve_num_buckets(self.num_buckets, num_vectors)
@@ -187,11 +215,15 @@ class QueryConfig:
     io_threads: int = 2
     io_batch_reads: bool = False
     emulate_read_latency_s: float = 0.0
+    compute_mode: str = "host"
+    verify_batch: int = 32
+    emulate_xfer_gb_s: float = 0.0
 
     def __post_init__(self):
         if self.io_mode not in ("sync", "prefetch"):
             raise ValueError(f"io_mode must be 'sync' or 'prefetch', "
                              f"got {self.io_mode!r}")
+        _validate_compute(self.compute_mode, self.verify_batch)
 
 
 def split_config(config: JoinConfig) -> tuple[BuildConfig, QueryConfig]:

@@ -51,6 +51,16 @@ class PipelineStats:
     shared_probe_reads: int = 0      # distinct buckets probed per wave, summed
     reads_saved_by_sharing: int = 0  # per-query probe refs minus distinct
     deadline_drops: int = 0          # requests expired & dropped pre-read
+    # device verify pipeline (repro.compute, compute_mode="device"):
+    # slab H2D transfers are bounded by cache residencies, not edge count
+    h2d_transfers: int = 0           # host→device transfers issued
+    h2d_bytes: int = 0               # bytes moved host→device
+    d2h_bytes: int = 0               # result bytes fetched device→host
+    h2d_transfers_saved: int = 0     # operand refs served device-resident
+    device_slab_hits: int = 0        # lookups hitting the device slab pool
+    device_batches: int = 0          # double-buffered kernel dispatches
+    device_compact_overflows: int = 0  # batches re-compacted at larger cap
+    d2h_overlap_s: float = 0.0       # host work overlapped with the kernel
     device_loads: list = dataclasses.field(default_factory=list)
     device_depth_max: list = dataclasses.field(default_factory=list)
 

@@ -56,6 +56,44 @@ def pairwise_l2_threshold(a, b, eps: float, *, use_pallas: bool = False,
     return d2[:m, :n], mask[:m, :n].astype(bool)
 
 
+@functools.partial(jax.jit, static_argnames=("eps2",))
+def _verify_pairs_ref(u, v, eps2: float):
+    d2 = jax.vmap(ref.pairwise_l2)(u, v)
+    return d2, d2 <= eps2
+
+
+def verify_pairs_batch(u, v, eps: float, *, use_pallas: bool = False,
+                       block: int = 128):
+    """Batched verify: (E, cap, d) × (E, cap, d) → (d2, mask), (E, cap, cap).
+
+    ONE dispatch for the whole edge batch — the Pallas path rides a
+    leading batch grid dimension (``pairwise_l2_threshold_batched``)
+    instead of E separate jit calls, and the reference path is the
+    vmapped oracle. Both engines (``repro.compute``) consume this, so
+    host and device compute modes see bitwise-identical d2.
+    """
+    eps2 = float(eps) ** 2
+    if not use_pallas:
+        return _verify_pairs_ref(u, v, eps2)
+    e, m, d = u.shape
+    # the kernel clamps blocks to the dims, so only dims above `block`
+    # that aren't multiples of it need padding
+    if d > block and d % block:
+        dp = _round_up(d, block)
+        u = jnp.pad(u, ((0, 0), (0, 0), (0, dp - d)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, dp - d)))
+    mp = _round_up(m, block) if (m > block and m % block) else m
+    if mp != m:
+        # pad rows far away so they can never pass the ε² threshold
+        u = jnp.pad(u, ((0, 0), (0, mp - m), (0, 0)), constant_values=1e15)
+        v = jnp.pad(v, ((0, 0), (0, mp - m), (0, 0)), constant_values=1e15)
+    d2, mask = _pairwise_kernel.pairwise_l2_threshold_batched(
+        u, v, eps2, interpret=not on_tpu())
+    if mp != m:
+        d2, mask = d2[:, :m, :m], mask[:, :m, :m]
+    return d2, mask.astype(bool)
+
+
 # ---------------------------------------------------------------------------
 # nearest-center assignment (bucketization scan 2)
 # ---------------------------------------------------------------------------

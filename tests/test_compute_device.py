@@ -1,0 +1,418 @@
+"""Device-resident verify pipeline (repro.compute): host/device parity
+matrix (pairs AND distances byte-identical), device slab-pool residency
+accounting (transfers == residencies, not edges), on-device compaction
+vs np.nonzero, verify_batch config, batched Pallas dispatch, distributed
+device mode + next-window prefetch, and the device query path."""
+import numpy as np
+import pytest
+
+
+def _store(x, tmp_path, name):
+    from repro.store.vector_store import FlatVectorStore
+    return FlatVectorStore.from_array(str(tmp_path / name), x)
+
+
+# ---------------------------------------------------------------------------
+# host/device parity matrix — the engines must agree byte for byte
+# ---------------------------------------------------------------------------
+class TestHostDeviceParity:
+    @pytest.mark.parametrize("io_mode,devices", [
+        ("sync", 1), ("prefetch", 1), ("sync", 4), ("prefetch", 4)])
+    def test_self_join_byte_identical(self, small_dataset, tmp_path,
+                                      io_mode, devices):
+        from repro.core import JoinConfig
+        from repro.core.join import similarity_self_join
+
+        x, eps = small_dataset
+        base = dict(epsilon=eps, pad_align=64, num_buckets=24,
+                    memory_budget_bytes=1 << 20, io_mode=io_mode,
+                    io_devices=devices,
+                    io_batch_reads=devices > 1, io_coalesce=devices > 1)
+        rh = similarity_self_join(_store(x, tmp_path, "h.bin"),
+                                  JoinConfig(compute_mode="host", **base))
+        rd = similarity_self_join(_store(x, tmp_path, "d.bin"),
+                                  JoinConfig(compute_mode="device", **base))
+        assert rh.pairs.shape[0] > 0
+        assert np.array_equal(rh.pairs, rd.pairs)
+        assert np.array_equal(rh.distances, rd.distances)  # byte-identical
+        assert rh.num_distance_computations == rd.num_distance_computations
+        assert rh.bucket_loads == rd.bucket_loads  # same schedule replay
+
+    @pytest.mark.parametrize("io_mode,devices", [
+        ("sync", 1), ("prefetch", 1), ("prefetch", 4)])
+    def test_cross_join_byte_identical(self, tmp_path, io_mode, devices):
+        from repro.core import JoinConfig
+        from repro.core.join import similarity_cross_join
+        from repro.data import clustered_vectors
+
+        rng = np.random.default_rng(3)
+        x = clustered_vectors(2000, 32, seed=5)
+        y = (x[:1200] + rng.normal(scale=0.05, size=(1200, 32))
+             ).astype(np.float32)
+        base = dict(epsilon=0.3, pad_align=64, num_buckets=16,
+                    memory_budget_bytes=1 << 20, io_mode=io_mode,
+                    io_devices=devices,
+                    io_batch_reads=devices > 1, io_coalesce=devices > 1)
+        rh = similarity_cross_join(_store(x, tmp_path, "xh"),
+                                   _store(y, tmp_path, "yh"),
+                                   JoinConfig(compute_mode="host", **base))
+        rd = similarity_cross_join(_store(x, tmp_path, "xd"),
+                                   _store(y, tmp_path, "yd"),
+                                   JoinConfig(compute_mode="device",
+                                              **base))
+        assert rh.pairs.shape[0] > 0
+        assert np.array_equal(rh.pairs, rd.pairs)
+        assert np.array_equal(rh.distances, rd.distances)
+
+    def test_attribute_mask_parity(self, small_dataset, tmp_path):
+        from repro.core import JoinConfig
+        from repro.core.join import similarity_self_join
+
+        x, eps = small_dataset
+        mask = np.arange(x.shape[0]) % 3 != 0
+        base = dict(epsilon=eps, pad_align=64, num_buckets=16,
+                    memory_budget_bytes=1 << 20)
+        rh = similarity_self_join(_store(x, tmp_path, "ah"),
+                                  JoinConfig(**base), attribute_mask=mask)
+        rd = similarity_self_join(_store(x, tmp_path, "ad"),
+                                  JoinConfig(compute_mode="device", **base),
+                                  attribute_mask=mask)
+        assert rh.pairs.shape[0] > 0
+        assert mask[rd.pairs].all()
+        assert np.array_equal(rh.pairs, rd.pairs)
+        assert np.array_equal(rh.distances, rd.distances)
+
+    @pytest.mark.parametrize("vb", [1, 5, 32])
+    def test_verify_batch_sizes_agree(self, small_dataset, tmp_path, vb):
+        from repro.core import JoinConfig
+        from repro.core.join import similarity_self_join
+
+        x, eps = small_dataset
+        x = x[:1500]
+        base = dict(epsilon=eps, pad_align=64, num_buckets=12,
+                    memory_budget_bytes=1 << 20)
+        ref = similarity_self_join(_store(x, tmp_path, f"r{vb}"),
+                                   JoinConfig(**base))
+        for cm in ("host", "device"):
+            r = similarity_self_join(
+                _store(x, tmp_path, f"{cm}{vb}"),
+                JoinConfig(compute_mode=cm, verify_batch=vb, **base))
+            assert np.array_equal(ref.pairs, r.pairs)
+            assert np.array_equal(ref.distances, r.distances)
+
+    def test_pallas_path_parity(self, tmp_path):
+        """Pallas (interpret) and device mode share the batched dispatch:
+        use_pallas host vs use_pallas device must stay byte-identical."""
+        from repro.core import JoinConfig
+        from repro.core.join import similarity_self_join
+        from repro.data import clustered_vectors, epsilon_for_avg_neighbors
+
+        x = clustered_vectors(900, 32, seed=5)
+        eps = epsilon_for_avg_neighbors(x, 8)
+        base = dict(epsilon=eps, pad_align=64, num_buckets=8,
+                    memory_budget_bytes=1 << 19, use_pallas=True)
+        rp = similarity_self_join(_store(x, tmp_path, "p"),
+                                  JoinConfig(**base))
+        rd = similarity_self_join(_store(x, tmp_path, "pd"),
+                                  JoinConfig(compute_mode="device", **base))
+        rr = similarity_self_join(_store(x, tmp_path, "pr"),
+                                  JoinConfig(**{**base,
+                                               "use_pallas": False}))
+        assert np.array_equal(rp.pairs, rd.pairs)
+        assert np.array_equal(rp.distances, rd.distances)
+        # pallas vs reference kernel: same pair set (bit-level d2 may
+        # differ between the two accumulation orders)
+        assert set(map(tuple, rp.pairs.tolist())) == \
+            set(map(tuple, rr.pairs.tolist()))
+
+    def test_config_validation(self):
+        from repro.core import JoinConfig
+        from repro.core.types import QueryConfig
+
+        with pytest.raises(ValueError, match="compute_mode"):
+            JoinConfig(epsilon=0.1, compute_mode="gpu")
+        with pytest.raises(ValueError, match="verify_batch"):
+            JoinConfig(epsilon=0.1, verify_batch=0)
+        with pytest.raises(ValueError, match="verify_batch"):
+            QueryConfig(epsilon=0.1, verify_batch=-1)
+        # both are query-time: per-call overrides must be accepted
+        from repro.core.types import QUERY_TIME_FIELDS
+        assert {"compute_mode", "verify_batch",
+                "emulate_xfer_gb_s"} <= QUERY_TIME_FIELDS
+
+
+# ---------------------------------------------------------------------------
+# device slab pool: transfers bounded by residencies, not edges
+# ---------------------------------------------------------------------------
+class TestDeviceSlabPool:
+    def test_operand_transfers_once_per_residency(self):
+        from repro.compute import DeviceSlabPool
+
+        pool = DeviceSlabPool()
+        slab = np.ones((8, 4), np.float32)
+        pool.operand(3, slab)
+        for _ in range(5):
+            pool.operand(3, slab)      # resident: no new transfer
+        assert (pool.transfers, pool.hits) == (1, 5)
+        pool.evict(3)
+        pool.operand(3, slab)          # new residency: one new transfer
+        assert pool.transfers == 2
+        assert pool.h2d_bytes == 2 * slab.nbytes
+
+    def test_staged_operand_harvested_to_device(self):
+        import jax
+
+        from repro.compute import DeviceSlabPool
+
+        pool = DeviceSlabPool()
+        slab = np.arange(12, dtype=np.float32).reshape(3, 4)
+        first = pool.operand(7, slab)
+        assert isinstance(first, np.ndarray)  # staged host copy
+        assert pool.needs_harvest(7)
+        dev = jax.device_put(slab)
+        pool.harvest(7, dev)
+        assert not pool.needs_harvest(7)
+        assert pool.operand(7, slab) is dev   # later batches go device
+
+    def test_executor_transfers_equal_residencies(self, tmp_path):
+        """End to end under a tight budget: every verified residency is
+        exactly one H2D transfer — edges re-touching a resident bucket
+        hit the device pool instead of re-staging."""
+        from repro.core import JoinConfig
+        from repro.core.join import similarity_self_join
+        from repro.data import clustered_vectors, epsilon_for_avg_neighbors
+
+        x = clustered_vectors(3000, 32, seed=7, clusters=6)
+        eps = epsilon_for_avg_neighbors(x, 15)
+        cfg = JoinConfig(epsilon=eps, pad_align=64, num_buckets=10,
+                         memory_budget_bytes=200_000,  # forces evictions
+                         compute_mode="device")
+        res = similarity_self_join(_store(x, tmp_path, "t"), cfg)
+        p = res.io_stats["pipeline"]
+        # with ~300-row buckets every residency carries an intra edge, so
+        # every load is verified: transfers == loads == residencies
+        assert p["h2d_transfers"] == res.bucket_loads
+        assert res.bucket_loads > cfg.num_buckets  # evictions + reloads
+        assert p["h2d_transfers_saved"] > 0
+        assert p["device_slab_hits"] == p["h2d_transfers_saved"]
+        # and strictly below the per-edge staging baseline: 2 operand
+        # stagings per edge reference
+        refs = p["h2d_transfers"] + p["h2d_transfers_saved"]
+        assert p["h2d_transfers"] < refs
+
+    def test_host_vs_device_h2d_bytes(self, small_dataset, tmp_path):
+        """Acceptance gate: device h2d volume strictly below the host
+        per-edge staging baseline on the same join."""
+        from repro.core import JoinConfig
+        from repro.core.join import similarity_self_join
+
+        x, eps = small_dataset
+        base = dict(epsilon=eps, pad_align=64, num_buckets=24,
+                    memory_budget_bytes=1 << 20, io_mode="prefetch")
+        rh = similarity_self_join(_store(x, tmp_path, "bh"),
+                                  JoinConfig(compute_mode="host", **base))
+        rd = similarity_self_join(_store(x, tmp_path, "bd"),
+                                  JoinConfig(compute_mode="device", **base))
+        ph = rh.io_stats["pipeline"]
+        pd = rd.io_stats["pipeline"]
+        assert 0 < pd["h2d_bytes"] < ph["h2d_bytes"]
+        assert 0 < pd["d2h_bytes"] < ph["d2h_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# on-device compaction kernel
+# ---------------------------------------------------------------------------
+class TestCompaction:
+    def _mask_case(self, seed=0, E=3, M=24, N=17, thresh=0.2):
+        rng = np.random.default_rng(seed)
+        d2 = rng.random((E, M, N)).astype(np.float32)
+        mask = d2 <= thresh
+        return d2, mask
+
+    def test_matches_nonzero_order_and_values(self):
+        import jax.numpy as jnp
+
+        from repro.compute import compact_pairs
+
+        d2, mask = self._mask_case()
+        E, M, N = d2.shape
+        na = np.array([M, M - 5, 0], np.int32)   # lane 2 masked out
+        nb = np.array([N, N - 3, N], np.int32)
+        intra = np.array([False, True, False])
+        counts, r, c, d = [np.asarray(o) for o in compact_pairs(
+            jnp.asarray(d2), jnp.asarray(mask), jnp.asarray(na),
+            jnp.asarray(nb), jnp.asarray(intra), 256)]
+        for e in range(E):
+            m = mask[e][:na[e], :nb[e]]
+            if intra[e]:
+                m = np.triu(m, k=1)
+            rows, cols = np.nonzero(m)
+            k = rows.size
+            assert counts[e] == k
+            assert np.array_equal(r[e, :k], rows)
+            assert np.array_equal(c[e, :k], cols)
+            np.testing.assert_array_equal(
+                d[e, :k], np.sqrt(d2[e][rows, cols]))
+        assert counts[2] == 0  # na = 0 kills the padded lane
+
+    def test_overflow_reports_true_count(self):
+        import jax.numpy as jnp
+
+        from repro.compute import compact_pairs
+
+        d2, mask = self._mask_case(thresh=0.9)  # dense: many pairs
+        E, M, N = d2.shape
+        k_cap = 8
+        na = np.full(E, M, np.int32)
+        nb = np.full(E, N, np.int32)
+        counts, r, c, d = [np.asarray(o) for o in compact_pairs(
+            jnp.asarray(d2), jnp.asarray(mask), jnp.asarray(na),
+            jnp.asarray(nb), jnp.asarray(np.zeros(E, bool)), k_cap)]
+        true_counts = mask.sum((1, 2))
+        assert np.array_equal(counts, true_counts)  # exact despite overflow
+        assert (true_counts > k_cap).all()
+        # the k_cap entries that did land are the FIRST pairs in
+        # row-major order
+        rows, cols = np.nonzero(mask[0])
+        assert np.array_equal(r[0], rows[:k_cap])
+        assert np.array_equal(c[0], cols[:k_cap])
+
+    def test_executor_overflow_recovery(self, tmp_path):
+        """A pair-dense workload whose first batches overflow the initial
+        compaction capacity must still match host results exactly."""
+        from repro.core import JoinConfig
+        from repro.core.join import similarity_self_join
+        from repro.compute import engine as eng
+
+        rng = np.random.default_rng(11)
+        # one tight clump: nearly all pairs within ε of each other
+        x = (rng.normal(scale=0.02, size=(600, 16))).astype(np.float32)
+        base = dict(epsilon=1.0, pad_align=64, num_buckets=4,
+                    memory_budget_bytes=1 << 19, prune=False)
+        rh = similarity_self_join(_store(x, tmp_path, "oh"),
+                                  JoinConfig(**base))
+        old = eng.PAIR_CAP_INIT
+        try:
+            eng.PAIR_CAP_INIT = 8  # force the overflow path
+            rd = similarity_self_join(
+                _store(x, tmp_path, "od"),
+                JoinConfig(compute_mode="device", **base))
+        finally:
+            eng.PAIR_CAP_INIT = old
+        assert rh.pairs.shape[0] > 1000
+        assert np.array_equal(rh.pairs, rd.pairs)
+        assert np.array_equal(rh.distances, rd.distances)
+
+
+# ---------------------------------------------------------------------------
+# batched kernel dispatch (the use_pallas per-edge loop fix)
+# ---------------------------------------------------------------------------
+class TestBatchedKernel:
+    def test_batched_pallas_matches_reference(self):
+        import jax.numpy as jnp
+
+        from repro.kernels import ops as kops
+
+        rng = np.random.default_rng(0)
+        u = rng.normal(size=(4, 64, 32)).astype(np.float32)
+        v = rng.normal(size=(4, 64, 32)).astype(np.float32)
+        d2r, mr = kops.verify_pairs_batch(jnp.asarray(u), jnp.asarray(v),
+                                          1.2)
+        d2p, mp = kops.verify_pairs_batch(jnp.asarray(u), jnp.asarray(v),
+                                          1.2, use_pallas=True)
+        np.testing.assert_allclose(np.asarray(d2r), np.asarray(d2p),
+                                   atol=1e-4)
+        assert np.array_equal(np.asarray(mr), np.asarray(mp))
+
+    def test_batched_pallas_pads_odd_shapes(self):
+        import jax.numpy as jnp
+
+        from repro.kernels import ops as kops
+
+        rng = np.random.default_rng(1)
+        u = rng.normal(size=(2, 192, 160)).astype(np.float32)
+        v = rng.normal(size=(2, 192, 160)).astype(np.float32)
+        d2r, mr = kops.verify_pairs_batch(jnp.asarray(u), jnp.asarray(v),
+                                          4.0)
+        d2p, mp = kops.verify_pairs_batch(jnp.asarray(u), jnp.asarray(v),
+                                          4.0, use_pallas=True)
+        assert d2p.shape == (2, 192, 192)
+        np.testing.assert_allclose(np.asarray(d2r), np.asarray(d2p),
+                                   atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# distributed join: device slabs + next-window prefetch
+# ---------------------------------------------------------------------------
+class TestDistributedDevice:
+    def _setup(self, tmp_path, budget):
+        from repro.core import JoinConfig, build_bucket_graph, bucketize
+        from repro.data import clustered_vectors, epsilon_for_avg_neighbors
+
+        x = clustered_vectors(3000, 32, seed=5)
+        eps = epsilon_for_avg_neighbors(x, 10)
+        cfg = dict(epsilon=eps, recall_target=0.95, pad_align=64,
+                   memory_budget_bytes=budget, num_buckets=24)
+        store = _store(x, tmp_path, "x.bin")
+        bs, meta, _ = bucketize(store, str(tmp_path / "bk"),
+                                JoinConfig(**cfg))
+        graph = build_bucket_graph(meta, JoinConfig(**cfg))
+        return bs, meta, graph, cfg
+
+    def test_device_mode_identical_pairs(self, tmp_path):
+        from repro.core import JoinConfig
+        from repro.core.distributed import DistributedJoin
+
+        bs, meta, graph, cfg = self._setup(tmp_path, 150_000)
+        ph, ih = DistributedJoin(bs, meta, JoinConfig(**cfg)).run(graph)
+        pd, idv = DistributedJoin(
+            bs, meta, JoinConfig(compute_mode="device", **cfg)).run(graph)
+        assert np.array_equal(ph, pd)
+        assert ih["supersteps"] > 1
+        assert ih["host_loads"] == idv["host_loads"]
+        # device transfers bounded by host residencies
+        assert idv["h2d_transfers"] <= idv["host_loads"]
+        assert idv["device_slab_hits"] > 0
+
+    def test_next_window_prefetch_overlaps(self, tmp_path):
+        """ROADMAP item: window w+1's missing buckets are pulled while
+        window w verifies — loads unchanged, most issued as prefetch."""
+        from repro.core import JoinConfig
+        from repro.core.distributed import DistributedJoin
+
+        bs, meta, graph, cfg = self._setup(tmp_path, 150_000)
+        _, info = DistributedJoin(bs, meta, JoinConfig(**cfg)).run(graph)
+        assert info["supersteps"] > 1
+        assert info["prefetched_buckets"] > 0
+        # prefetched loads are a subset of total loads (never extra I/O)
+        assert info["prefetched_buckets"] <= info["host_loads"]
+
+
+# ---------------------------------------------------------------------------
+# online queries through the device path
+# ---------------------------------------------------------------------------
+class TestQueryDevice:
+    def test_query_batch_device_parity(self, small_dataset, tmp_path):
+        from repro.core import DiskJoinIndex, JoinConfig
+
+        x, eps = small_dataset
+        store = _store(x, tmp_path, "q.bin")
+        cfg = JoinConfig(epsilon=eps, pad_align=64, num_buckets=32,
+                         memory_budget_bytes=1 << 20)
+        with DiskJoinIndex.build(store, cfg,
+                                 str(tmp_path / "idx")) as index:
+            Q = x[:30] + 0.001
+            host = index.query_batch(Q)
+            base = index.pipeline_snapshot()
+            dev = index.query_batch(Q, compute_mode="device")
+            snap = index.pipeline_snapshot()
+            for (ih, dh), (idv, ddv) in zip(host, dev):
+                oh, od = np.argsort(ih), np.argsort(idv)
+                assert np.array_equal(np.sort(ih), np.sort(idv))
+                # device distances are f32 (host is f64): close, not
+                # byte-identical — documented in _make_device_verify
+                np.testing.assert_allclose(np.asarray(dh)[oh],
+                                           np.asarray(ddv)[od], atol=1e-3)
+            # the wave's query block crossed once; bucket slabs reused it
+            assert snap["h2d_transfers"] > base["h2d_transfers"]
+            assert snap["h2d_transfers_saved"] > base["h2d_transfers_saved"]
