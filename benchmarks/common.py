@@ -1,7 +1,11 @@
 """Shared benchmark scaffolding: datasets, timing, CSV emission."""
 from __future__ import annotations
 
+import hashlib
+import json
 import os
+import platform
+import sys
 import tempfile
 import time
 
@@ -15,6 +19,43 @@ from repro.store.vector_store import FlatVectorStore
 # benchmark scale knob: the paper runs 100M–1.4B vectors on NVMe; this
 # container validates the same algorithms at laptop scale (repro band 5/5).
 SMALL = os.environ.get("REPRO_BENCH_SMALL", "0") == "1"
+
+# perf-trajectory collection (benchmarks/run.py --json-out): emit() mirrors
+# every row here, keyed by figure module, and attach_stats() adds
+# trace-derived quantities; run.py diffs COLLECTED around each module and
+# writes BENCH_<figure>.json
+COLLECTED: dict[str, list[dict]] = {}
+TRACE_STATS: dict[str, dict] = {}
+_CURRENT_FIGURE = "unknown"
+
+
+def set_figure(name: str) -> None:
+    """run.py points collection at the module it is about to run."""
+    global _CURRENT_FIGURE
+    _CURRENT_FIGURE = name
+
+
+def attach_stats(figure: str | None = None, **stats) -> None:
+    """Attach trace/metrics-derived scalars to the current figure's
+    trajectory record (e.g. ``attach_stats(read_hidden_fraction=0.93)``)."""
+    TRACE_STATS.setdefault(figure or _CURRENT_FIGURE, {}).update(stats)
+
+
+def config_fingerprint() -> dict:
+    """Environment fingerprint stamped into every BENCH_<fig>.json so a
+    trajectory point is comparable only against points from like runs."""
+    import jax
+    env = {
+        "small": SMALL,
+        "python": platform.python_version(),
+        "numpy": np.__version__,
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+    }
+    blob = json.dumps(env, sort_keys=True).encode()
+    env["sha"] = hashlib.sha256(blob).hexdigest()[:12]
+    return env
 
 
 def scale(n: int) -> int:
@@ -52,6 +93,8 @@ def emit(name: str, rows: list[dict]) -> None:
         derived = ";".join(f"{k}={v}" for k, v in r.items()
                            if k not in ("name", "us_per_call"))
         print(f"{r.get('name', name)},{r.get('us_per_call', '')},{derived}")
+    COLLECTED.setdefault(_CURRENT_FIGURE, []).extend(
+        {**r, "_emit": name} for r in rows)
 
 
 def timed_us(fn, *args, repeats: int = 1, **kw) -> tuple[float, object]:

@@ -15,7 +15,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import dataset, emit, run_join, scale
+from benchmarks.common import attach_stats, dataset, emit, run_join, scale
+from repro.obs import trace_session
 
 LATENCY_S = 5e-4  # ~0.5 ms per bucket read — NVMe-ish random access
 
@@ -64,6 +65,24 @@ def main() -> None:
                     "backpressure": p["blocked_acquires"],
                     "hidden_vs_sync": f"{max(0.0, 1 - res.timings['io_wait']/max(sync_read_s, 1e-9)):.3f}",
                 })
+
+    # trace-enabled rerun of the best prefetch config: the span-derived
+    # hidden fraction is the same quantity as overlap_efficiency measured
+    # from the trace timeline instead of the stats accumulators
+    with trace_session() as tr:
+        res, t, _ = run_join(x, eps, io_mode="prefetch", io_lookahead=32,
+                             io_threads=4,
+                             emulate_read_latency_s=LATENCY_S)
+    an = tr.analysis()
+    hidden = an.hidden_fraction("io.read", "io.wait")
+    p = res.io_stats["pipeline"]
+    row("fig19/prefetch_la32_traced", res, t, {
+        "overlap_eff": f"{p['overlap_efficiency']:.3f}",
+        "trace_hidden_fraction": f"{hidden:.3f}",
+        "trace_reads": an.count("io.read"),
+    })
+    attach_stats(read_hidden_fraction=hidden,
+                 overlap_efficiency=p["overlap_efficiency"])
 
     emit("fig19", rows)
     # the acceptance gate of the pipeline: prefetch stalls < serial read time

@@ -1,0 +1,130 @@
+"""Trace-enabled smoke (obs subsystem acceptance; CI runs this figure).
+
+Two traced scenarios against one small built index:
+
+  1. **batch self-join** with ``io_mode="prefetch"`` +
+     ``compute_mode="device"`` under emulated SSD latency — export the
+     span trace as Chrome-trace JSON, validate the schema, and assert
+     the pipeline actually overlapped: reads coincided with the verify
+     walk (``overlap_seconds("io.read", ("verify.*", "join.run")) > 0``)
+     and the trace-derived ``hidden_fraction("io.read", "io.wait")``
+     tracks ``PipelineStats.overlap_efficiency``.
+  2. **scheduler wave** — concurrent requests through a
+     ``QueryScheduler``; assert ``serve.wave`` spans exist and every
+     completed request's ``serve.request`` async pair carries its wave id.
+
+Emits one CSV row per scenario and attaches the trace-derived overlap
+figures to the perf-trajectory record (``common.attach_stats``), so
+``run.py --json-out`` captures the overlap trajectory per commit.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import attach_stats, dataset, emit, scale
+from repro.core import DiskJoinIndex, JoinConfig
+from repro.obs import trace_session, validate_chrome_trace
+from repro.serve import QueryScheduler
+from repro.store.vector_store import FlatVectorStore
+
+LATENCY_S = 5e-4   # emulated per-bucket read latency (NVMe-ish)
+
+
+def main() -> None:
+    n = scale(8000)
+    x, eps = dataset(n, dim=32, avg_neighbors=10)
+    workdir = tempfile.mkdtemp(prefix="obs_trace_")
+    store = FlatVectorStore.from_array(os.path.join(workdir, "x.bin"), x)
+    cfg = JoinConfig(epsilon=eps, recall_target=0.9, pad_align=64,
+                     num_buckets=max(32, n // 100),
+                     memory_budget_bytes=max(1 << 20, x.nbytes // 10),
+                     io_mode="prefetch", io_threads=4,
+                     compute_mode="device",
+                     emulate_read_latency_s=LATENCY_S)
+    index = DiskJoinIndex.build(store, cfg, os.path.join(workdir, "idx"))
+    rows = []
+
+    # -- 1. traced batch self-join: export, validate, overlap asserts ---------
+    index.self_join(epsilon=eps)          # warm the verify-kernel jit
+    index.drop_warm_cache()
+    base = index.pipeline_snapshot()
+    with trace_session() as tr:
+        res = index.self_join(epsilon=eps)
+    snap = index.pipeline_snapshot()
+    trace_path = os.path.join(workdir, "join.trace.json")
+    tr.export(trace_path)
+    n_events = validate_chrome_trace(trace_path)
+    an = tr.analysis()
+
+    read_s = snap["read_s"] - base["read_s"]
+    io_wait_s = snap["io_wait_s"] - base["io_wait_s"]
+    overlap_eff = (max(0.0, read_s - io_wait_s) / read_s
+                   if read_s > 0 else 1.0)
+    hidden = an.hidden_fraction("io.read", "io.wait")
+    read_verify_overlap_s = an.overlap_seconds(
+        "io.read", ("verify.*", "join.run"))
+
+    assert n_events > 0, "trace exported zero events"
+    assert read_verify_overlap_s > 0, \
+        "prefetch reads never overlapped the verify walk in the trace"
+    assert {"io.read", "io.wait", "join.run", "verify.dispatch"} <= \
+        set(an.names()), f"missing expected spans: {sorted(an.names())}"
+    rows.append({
+        "name": "obs_trace/self_join_prefetch_device",
+        "us_per_call": "",
+        "pairs": int(res.pairs.shape[0]),
+        "trace_events": n_events,
+        "read_hidden_fraction": f"{hidden:.3f}",
+        "overlap_efficiency": f"{overlap_eff:.3f}",
+        "read_verify_overlap_s": f"{read_verify_overlap_s:.4f}",
+        "busy_wall_s":
+            f"{sum(v for k, v in an.critical_path().items() if k != 'idle'):.4f}",
+    })
+    attach_stats(read_hidden_fraction=hidden,
+                 overlap_efficiency=overlap_eff,
+                 read_verify_overlap_s=read_verify_overlap_s,
+                 trace_events=n_events)
+
+    # -- 2. traced scheduler wave: spans + request↔wave linkage ---------------
+    rng = np.random.default_rng(6)
+    n_req = max(32, n // 32)
+    queries = (x[rng.choice(n, n_req)]
+               + rng.normal(scale=0.01, size=(n_req, x.shape[1]))
+               ).astype(np.float32)
+    with trace_session() as tr2:
+        with QueryScheduler(index, wave_size=16, max_wait_s=0.002,
+                            max_queue=4 * n_req) as sched:
+            futs = [sched.submit(q) for q in queries]
+            for f in futs:
+                f.result(timeout=600)
+    an2 = tr2.analysis()
+    waves = an2.count("serve.wave")
+    pairs = an2.async_pairs("serve.request")
+    assert waves > 0, "no serve.wave spans recorded"
+    assert len(pairs) == n_req, \
+        f"{len(pairs)} serve.request pairs for {n_req} requests"
+    assert all(p["args"].get("wave", 0) > 0 for p in pairs), \
+        "a completed request's async end carries no wave id"
+    rows.append({
+        "name": "obs_trace/scheduler_wave",
+        "us_per_call": "",
+        "requests": n_req,
+        "waves": waves,
+        "request_p95_ms":
+            f"{np.percentile([p['duration_s'] for p in pairs], 95) * 1e3:.2f}",
+    })
+    attach_stats(serve_waves=waves, serve_requests=len(pairs))
+
+    emit("obs_trace", rows)
+    print(f"# obs_trace summary: {n_events} events, "
+          f"hidden={hidden:.3f} vs overlap_eff={overlap_eff:.3f}, "
+          f"read∩verify={read_verify_overlap_s:.4f}s; "
+          f"{waves} waves / {len(pairs)} traced requests")
+    index.close()
+
+
+if __name__ == "__main__":
+    main()

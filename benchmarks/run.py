@@ -2,19 +2,31 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
 ``REPRO_BENCH_SMALL=1`` runs each at 1/10 scale (CI smoke).
+
+``--json-out DIR`` additionally writes one ``BENCH_<figure>.json`` per
+executed module — the emitted rows, any trace-derived stats the module
+attached (``common.attach_stats``), the config fingerprint, elapsed wall
+time and pass/fail status. CI archives these per commit: the perf
+trajectory of the repo, one point per figure per revision.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
 import time
 import traceback
 
-from benchmarks import (fig7_baselines, fig8_recall, fig9_memory,
+import numpy as np
+
+from benchmarks import (common, fig7_baselines, fig8_recall, fig9_memory,
                         fig10_threshold, fig11_buckets, fig12_breakdown,
                         fig13_crossjoin, fig14_fragmentation, fig15_io,
                         fig17_ablation, fig18_pruning, fig19_pipeline,
                         fig20_striping, fig21_online, fig22_scheduler,
-                        fig23_device_pipeline, kernel_roofline, randomness)
+                        fig23_device_pipeline, kernel_roofline, obs_trace,
+                        randomness)
 
 MODULES = [
     ("fig7_baselines", fig7_baselines),
@@ -33,25 +45,75 @@ MODULES = [
     ("fig21_online", fig21_online),
     ("fig22_scheduler", fig22_scheduler),
     ("fig23_device_pipeline", fig23_device_pipeline),
+    ("obs_trace", obs_trace),
     ("randomness", randomness),
     ("kernel_roofline", kernel_roofline),
 ]
 
 
+def _json_default(o):
+    if isinstance(o, (np.integer,)):
+        return int(o)
+    if isinstance(o, (np.floating,)):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    return str(o)
+
+
+def _write_record(json_out: str, name: str, *, rows, stats, elapsed,
+                  status, fingerprint) -> str:
+    rec = {
+        "figure": name,
+        "status": status,
+        "elapsed_s": elapsed,
+        "fingerprint": fingerprint,
+        "rows": rows,
+        "trace_stats": stats,
+    }
+    path = os.path.join(json_out, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2, default=_json_default)
+    return path
+
+
 def main() -> None:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("only", nargs="?", default=None,
+                    help="substring filter on module names")
+    ap.add_argument("--json-out", metavar="DIR", default=None,
+                    help="write per-figure BENCH_<figure>.json records "
+                         "into DIR (perf-trajectory pipeline)")
+    args = ap.parse_args()
+
+    fingerprint = None
+    if args.json_out:
+        os.makedirs(args.json_out, exist_ok=True)
+        fingerprint = common.config_fingerprint()
+
     failures = []
     for name, mod in MODULES:
-        if only and only not in name:
+        if args.only and args.only not in name:
             continue
         t0 = time.perf_counter()
         print(f"# === {name} ===", flush=True)
+        common.set_figure(name)
+        status = "ok"
         try:
             mod.main()
         except Exception:
             failures.append(name)
+            status = "error"
             traceback.print_exc()
-        print(f"# {name} done in {time.perf_counter()-t0:.1f}s", flush=True)
+        elapsed = time.perf_counter() - t0
+        print(f"# {name} done in {elapsed:.1f}s", flush=True)
+        if args.json_out:
+            path = _write_record(
+                args.json_out, name,
+                rows=common.COLLECTED.get(name, []),
+                stats=common.TRACE_STATS.get(name, {}),
+                elapsed=elapsed, status=status, fingerprint=fingerprint)
+            print(f"# wrote {path}", flush=True)
     if failures:
         print(f"# FAILED: {failures}")
         sys.exit(1)

@@ -109,6 +109,22 @@ def main() -> None:
     assert len(results) == 64
     assert ssnap["pipeline"]["reads_saved_by_sharing"] > 0
 
+    # -- observe your join: span trace + Perfetto export + metrics -----------
+    from repro.obs import trace_session  # noqa: E402
+
+    with trace_session() as tracer:           # scoped recording tracer
+        index.self_join(io_mode="prefetch", emulate_read_latency_s=5e-4)
+    trace_path = tracer.export(os.path.join(workdir, "join.trace.json"))
+    an = tracer.analysis()
+    print(f"\ntraced join → {trace_path} (open at ui.perfetto.dev)")
+    print(f"read time hidden behind verify: "
+          f"{an.hidden_fraction('io.read', 'io.wait'):.1%} "
+          f"(spans: {', '.join(an.names())})")
+    metrics = index.metrics_snapshot()        # one surface per session
+    print(f"metrics sections: {sorted(metrics)}; "
+          f"pipeline overlap_efficiency="
+          f"{metrics['pipeline']['overlap_efficiency']:.3f}")
+
     # -- reattach later without rescanning -----------------------------------
     index.close()
     reopened = DiskJoinIndex.open(os.path.join(workdir, "index"))

@@ -51,6 +51,7 @@ import numpy as np
 
 from repro.compute.slab_pool import DeviceSlabPool
 from repro.kernels import ops as kops
+from repro.obs import get_tracer
 
 PAIR_CAP_INIT = 1024  # initial per-edge compaction capacity (pairs)
 
@@ -146,7 +147,7 @@ class _EngineBase:
     def __init__(self, cache, *, epsilon: float, capacity_rows: int,
                  dim: int, verify_batch: int, use_pallas: bool = False,
                  attribute_mask: np.ndarray | None = None, pstats=None,
-                 xfer_gb_s: float = 0.0):
+                 xfer_gb_s: float = 0.0, tracer=None):
         self.cache = cache
         self.eps = float(epsilon)
         self.cap = int(capacity_rows)
@@ -155,6 +156,7 @@ class _EngineBase:
         self.use_pallas = bool(use_pallas)
         self.attribute_mask = attribute_mask
         self.pstats = pstats
+        self.tracer = tracer if tracer is not None else get_tracer()
         self.xfer_gb_s = float(xfer_gb_s)
         self.dc = 0              # distance computations (live pairs)
         self.compute_s = 0.0     # engine wall time in stage/dispatch/extract
@@ -208,6 +210,10 @@ class HostVerifyEngine(_EngineBase):
     def flush(self) -> None:
         if not self._batch:
             return
+        with self.tracer.span("verify.flush", edges=len(self._batch)):
+            self._flush()
+
+    def _flush(self) -> None:
         t0 = time.perf_counter()
         E = len(self._batch)
         # partial flushes dispatch at the next pow2 lane count; lanes past
@@ -277,7 +283,8 @@ class DeviceVerifyEngine(_EngineBase):
         # OS timer slack and dwarf the modeled cost
         self._link_debt = 0
         self.pool = DeviceSlabPool(self.pstats,
-                                   on_transfer=self._defer_link_charge)
+                                   on_transfer=self._defer_link_charge,
+                                   tracer=self.tracer)
         self._batch: list[tuple] = []
         self._inflight: tuple | None = None
         # start the compaction capacity at ~8 pairs per slab row: dense
@@ -330,6 +337,11 @@ class DeviceVerifyEngine(_EngineBase):
             self._charge_link(self._link_debt)
             self._link_debt = 0
         self._collect()        # previous batch; drains the device queue
+        self._dispatch()
+
+    def _dispatch(self) -> None:
+        span = self.tracer.span("verify.dispatch", edges=len(self._batch))
+        span.__enter__()
         t0 = time.perf_counter()
         E = len(self._batch)
         B = min(self.verify_batch, next_pow2(E))
@@ -372,6 +384,7 @@ class DeviceVerifyEngine(_EngineBase):
         self._inflight = (out, slabs, na, nb, intra, metas, harvest,
                           k_cap, time.perf_counter())
         self.compute_s += time.perf_counter() - t0
+        span.__exit__(None, None, None)
 
     def _defer_link_charge(self, nbytes: int) -> None:
         self._link_debt += nbytes
@@ -382,6 +395,8 @@ class DeviceVerifyEngine(_EngineBase):
         (out, slabs, na, nb, intra, metas, harvest, k_cap,
          t_dispatch) = self._inflight
         self._inflight = None
+        span = self.tracer.span("verify.collect")
+        span.__enter__()
         t0 = time.perf_counter()
         # host time since dispatch ran concurrently with the kernel
         self._stat("d2h_overlap_s", max(0.0, t0 - t_dispatch))
@@ -393,6 +408,7 @@ class DeviceVerifyEngine(_EngineBase):
             k_cap = min(next_pow2(top), self.cap * self.cap)
             self.pair_cap = max(self.pair_cap, k_cap)
             self._stat("device_compact_overflows", 1)
+            self.tracer.instant("verify.overflow", top=top, k_cap=k_cap)
             out = device_verify(na, nb, intra, *slabs, eps=self.eps,
                                 k_cap=k_cap, use_pallas=self.use_pallas)
             counts = np.asarray(out[0])
@@ -424,6 +440,7 @@ class DeviceVerifyEngine(_EngineBase):
                                   .astype(np.int64))
             self.dists_out.append(d.astype(np.float32))
         self.compute_s += time.perf_counter() - t0
+        span.__exit__(None, None, None)
 
     def finish(self) -> None:
         self.flush()
@@ -436,7 +453,7 @@ class DeviceVerifyEngine(_EngineBase):
 
 
 def make_verify_engine(config, cache, capacity_rows: int, dim: int,
-                       attribute_mask=None, pstats=None):
+                       attribute_mask=None, pstats=None, tracer=None):
     """Engine per ``JoinConfig.compute_mode`` ("host" | "device")."""
     cls = (DeviceVerifyEngine if config.compute_mode == "device"
            else HostVerifyEngine)
@@ -445,4 +462,4 @@ def make_verify_engine(config, cache, capacity_rows: int, dim: int,
                verify_batch=int(config.verify_batch),
                use_pallas=bool(config.use_pallas),
                attribute_mask=attribute_mask, pstats=pstats,
-               xfer_gb_s=float(config.emulate_xfer_gb_s))
+               tracer=tracer, xfer_gb_s=float(config.emulate_xfer_gb_s))

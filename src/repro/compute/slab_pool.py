@@ -32,10 +32,11 @@ import numpy as np
 class DeviceSlabPool:
     """bucket id → device-resident (capacity, dim) float32 operand."""
 
-    def __init__(self, stats=None, on_transfer=None):
+    def __init__(self, stats=None, on_transfer=None, tracer=None):
         # bucket -> [device array | None, staged host copy | None]
         self._slabs: dict[int, list] = {}
         self.stats = stats
+        self.tracer = tracer
         self.on_transfer = on_transfer  # e.g. emulated-link charge (bytes)
         self.transfers = 0       # H2D slab transfers (== residencies used)
         self.hits = 0            # operand lookups served pool-resident
@@ -67,6 +68,9 @@ class DeviceSlabPool:
         if self.stats is not None:
             self.stats.add("h2d_transfers", 1)
             self.stats.add("h2d_bytes", int(host.nbytes))
+        if self.tracer is not None:
+            self.tracer.instant("h2d.stage", bucket=b,
+                                bytes=int(host.nbytes))
         if self.on_transfer is not None:
             self.on_transfer(int(host.nbytes))
         return host

@@ -30,6 +30,7 @@ from repro.core.types import (BucketGraph, BucketMeta, JoinConfig,
                               dedup_pairs, resolve_bucket_capacity,
                               resolve_cache_buckets, round_up as _round_up)
 from repro.kernels import ref
+from repro.obs import get_tracer
 
 
 @partial(jax.jit, static_argnames=("eps2",))
@@ -195,12 +196,14 @@ class DistributedJoin:
         window w's keep-set trim runs, or gap-retained buckets (kept by
         PR 2's upcoming-window keep-set) would be pushed out early and
         re-read. ``_fetch`` merges staged entries in when w+1 begins."""
-        for b in step.bucket_ids:
-            b = int(b)
-            if b not in self._host_cache and b not in self._staged:
-                self._staged[b] = self._read_padded(b)
-                self.loads += 1
-                self.prefetched += 1
+        with get_tracer().span("dist.prefetch",
+                               buckets=len(step.bucket_ids)):
+            for b in step.bucket_ids:
+                b = int(b)
+                if b not in self._host_cache and b not in self._staged:
+                    self._staged[b] = self._read_padded(b)
+                    self.loads += 1
+                    self.prefetched += 1
 
     def _dispatch_compact(self, slab, edges, entries, eps2, sharding):
         """Issue the compacted verify for one superstep (async). Edge
@@ -264,10 +267,15 @@ class DistributedJoin:
                 self.mesh, jax.sharding.PartitionSpec("data"))
 
         dc = 0
+        tracer = get_tracer()
         for si, step in enumerate(steps):
             edges = step.edges_local
             if edges.shape[0] == 0:
                 continue  # defensive: planner always pairs buckets w/ edges
+            step_span = tracer.span("dist.superstep", step=si,
+                                    buckets=len(step.bucket_ids),
+                                    edges=int(edges.shape[0]))
+            step_span.__enter__()
             entries = [self._fetch(int(b)) for b in step.bucket_ids]
             E = edges.shape[0]
             if self._dev_pool is not None:
@@ -334,6 +342,7 @@ class DistributedJoin:
             else:
                 keep = set(int(b) for b in step.bucket_ids)
             self._evict_to(keep)
+            step_span.__exit__(None, None, None)
 
         if pairs_out:
             pairs, _ = dedup_pairs(np.concatenate(pairs_out))

@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.compute import make_verify_engine
 from repro.core import cache as cache_mod
+from repro.obs import get_tracer
 from repro.core import ordering
 from repro.core.types import (BucketGraph, BucketMeta, JoinConfig,
                               JoinResult, dedup_pairs,
@@ -103,7 +104,7 @@ class JoinExecutor:
     def __init__(self, store: BucketedVectorStore, meta: BucketMeta,
                  config: JoinConfig,
                  attribute_mask: np.ndarray | None = None,
-                 shared_pool=None, shared_stats=None):
+                 shared_pool=None, shared_stats=None, tracer=None):
         """``attribute_mask``: (N,) bool — attribute filtering (paper §3
         extension): vectors failing the predicate are excluded from
         verification via a bitmap, before any distance is computed.
@@ -120,6 +121,7 @@ class JoinExecutor:
         self.attribute_mask = attribute_mask
         self.shared_pool = shared_pool
         self.shared_stats = shared_stats
+        self.tracer = tracer if tracer is not None else get_tracer()
         cap = resolve_bucket_capacity(config, meta.sizes)
         self.bucket_capacity = cap
         self.padded_bucket_bytes = cap * store.dim * 4
@@ -135,13 +137,16 @@ class JoinExecutor:
         ``ordering.compute_node_order``.
         """
         t0 = time.perf_counter()
-        if node_order is None:
-            node_order = ordering.compute_node_order(
-                graph, self.meta, self.config, self.cache_buckets)
-        tasks, access_seq, pins = ordering.edge_schedule(graph, node_order)
-        schedule = cache_mod.simulate_policy(
-            access_seq, graph.num_nodes, self.cache_buckets,
-            self.config.eviction_policy, pins)
+        with self.tracer.span("join.plan", edges=graph.num_edges,
+                              buckets=graph.num_nodes):
+            if node_order is None:
+                node_order = ordering.compute_node_order(
+                    graph, self.meta, self.config, self.cache_buckets)
+            tasks, access_seq, pins = ordering.edge_schedule(graph,
+                                                            node_order)
+            schedule = cache_mod.simulate_policy(
+                access_seq, graph.num_nodes, self.cache_buckets,
+                self.config.eviction_policy, pins)
         plan_seconds = time.perf_counter() - t0
         return tasks, access_seq, schedule, plan_seconds
 
@@ -174,7 +179,8 @@ class JoinExecutor:
             lookahead=self.config.io_lookahead, pool_slabs=pool_slabs,
             num_threads=self.config.io_threads, pad_value=PAD_COORD,
             batch_reads=self.config.io_batch_reads,
-            coalesce=self.config.io_coalesce, stats=stats, pool=pool)
+            coalesce=self.config.io_coalesce, stats=stats, pool=pool,
+            tracer=self.tracer)
         return cache, stats
 
     def run(self, graph: BucketGraph,
@@ -189,8 +195,13 @@ class JoinExecutor:
         engine = make_verify_engine(self.config, cache,
                                     self.bucket_capacity, self.store.dim,
                                     attribute_mask=self.attribute_mask,
-                                    pstats=pstats)
+                                    pstats=pstats, tracer=self.tracer)
 
+        tracer = self.tracer
+        run_span = tracer.span("join.run", edges=graph.num_edges,
+                               io_mode=self.config.io_mode,
+                               compute_mode=self.config.compute_mode)
+        run_span.__enter__()
         t0 = time.perf_counter()
         ai = 0  # index into access_seq / schedule.actions
         actions = schedule.actions
@@ -214,7 +225,12 @@ class JoinExecutor:
                     engine.flush()
                 t0 = time.perf_counter()
                 cache.load(b)
-                io_wait += time.perf_counter() - t0
+                dt = time.perf_counter() - t0
+                io_wait += dt
+                # same interval as the io_wait accumulator (see
+                # tracer.complete): hidden_fraction("io.read", "io.wait")
+                # must agree with overlap_efficiency by construction
+                tracer.complete("io.wait", t0, dt, bucket=b)
 
         try:
             for task in tasks:
@@ -232,6 +248,7 @@ class JoinExecutor:
         finally:
             engine.abort()
             cache.close()
+            run_span.__exit__(None, None, None)
         exec_seconds = time.perf_counter() - t0
         compute_t = engine.compute_s  # engine time in stage/dispatch/extract
 

@@ -59,6 +59,7 @@ from repro.core.types import (BUILD_TIME_FIELDS, QUERY_TIME_FIELDS,
                               merge_config, resolve_bucket_capacity,
                               resolve_cache_buckets, split_config)
 from repro.io import BufferPool, PipelineStats
+from repro.obs import MetricsRegistry, get_tracer
 from repro.store.striped_store import StripedBucketedVectorStore
 from repro.store.vector_store import BucketedVectorStore, FlatVectorStore
 
@@ -85,6 +86,14 @@ class DiskJoinIndex:
         self.build_timings = dict(build_timings or {})
         self.build_seconds = float(build_seconds)
         self.stats = PipelineStats()        # ONE lifetime telemetry surface
+        # session tracer: None → resolve the current (module-level) tracer
+        # at call time, so `with trace_session():` around any join/query
+        # records without re-plumbing; set to a Tracer to pin one
+        self.tracer = None
+        self.metrics = MetricsRegistry()
+        self.metrics.register_provider("pipeline", self.stats.snapshot)
+        self.metrics.register_provider("io",
+                                       lambda: self.store.stats.snapshot())
         self.bucket_capacity = resolve_bucket_capacity(build_config,
                                                        meta.sizes)
         self._pool: BufferPool | None = None
@@ -270,6 +279,9 @@ class DiskJoinIndex:
     def dim(self) -> int:
         return self.store.dim
 
+    def _tracer(self):
+        return self.tracer if self.tracer is not None else get_tracer()
+
     # -- config resolution ---------------------------------------------------
     def _resolve(self, overrides: dict) -> JoinConfig:
         """Merge per-call query-time overrides over the session defaults.
@@ -355,7 +367,8 @@ class DiskJoinIndex:
                 else None)
         executor = JoinExecutor(self.store, self.meta, cfg,
                                 attribute_mask=attribute_mask,
-                                shared_pool=pool, shared_stats=self.stats)
+                                shared_pool=pool, shared_stats=self.stats,
+                                tracer=self._tracer())
         node_order = self._order_for(graph, cfg, executor.cache_buckets,
                                      gkey)
         self._begin_join()
@@ -457,7 +470,8 @@ class DiskJoinIndex:
             overrides["epsilon"] = epsilon
         cfg = self._resolve(overrides)
         Q = self._validate_queries(Q)
-        return self._candidate_buckets(Q, cfg)
+        with self._tracer().span("query.plan", queries=Q.shape[0]):
+            return self._candidate_buckets(Q, cfg)
 
     def execute_probes(self, Q: np.ndarray, per_q: list[np.ndarray],
                        epsilon: float | None = None, **overrides
@@ -507,6 +521,14 @@ class DiskJoinIndex:
     def _execute_probes(self, Q: np.ndarray, per_q: list[np.ndarray],
                         cfg: JoinConfig
                         ) -> list[tuple[np.ndarray, np.ndarray]]:
+        with self._tracer().span(
+                "query.execute", queries=Q.shape[0],
+                buckets=len({int(b) for ids in per_q for b in ids})):
+            return self._execute_probes_inner(Q, per_q, cfg)
+
+    def _execute_probes_inner(self, Q: np.ndarray, per_q: list[np.ndarray],
+                              cfg: JoinConfig
+                              ) -> list[tuple[np.ndarray, np.ndarray]]:
         eps = float(cfg.epsilon)
         # bucket -> probing query rows; each distinct bucket is read once
         probe: dict[int, list[int]] = {}
@@ -726,7 +748,8 @@ class DiskJoinIndex:
             self.store, misses, pool, lookahead=cfg.io_lookahead,
             num_threads=cfg.io_threads, stats=self.stats,
             pad_value=PAD_COORD, batch_reads=cfg.io_batch_reads,
-            coalesce=cfg.io_coalesce, close_pool=False)
+            coalesce=cfg.io_coalesce, close_pool=False,
+            tracer=self._tracer())
         try:
             for _ in misses:
                 b, slot, n = pf.pop_next()
@@ -781,6 +804,12 @@ class DiskJoinIndex:
 
     def io_snapshot(self) -> dict:
         return self.store.stats.snapshot()
+
+    def metrics_snapshot(self) -> dict:
+        """The session's full metrics surface (``repro.obs``): registered
+        instruments plus the pipeline/io provider sections — and whatever
+        services (scheduler, query service) registered on top."""
+        return self.metrics.snapshot()
 
     def merge_build_timings(self, timings: dict) -> dict:
         """Fold this index's (amortized) build cost into a result's

@@ -115,6 +115,34 @@ class PipelineStats:
             if d["read_s"] > 0 else 1.0)
         return d
 
+    @staticmethod
+    def merge(snapshots: list[dict]) -> dict:
+        """Aggregate ``snapshot()`` dicts from several sessions (one per
+        router shard) into one rollup. Naive summation is wrong for two
+        classes of fields: the list-valued per-device telemetry
+        (``device_loads``/``device_depth_max``) — shards own *distinct*
+        devices, so lists concatenate and ``num_devices`` sums rather
+        than zip-adding lists of unequal length — and the gauges, which
+        are point-in-time readings where only the max across shards is
+        meaningful. Additive counters sum; ``overlap_efficiency`` is
+        recomputed from the merged read/wait totals, never averaged.
+        """
+        out: dict = {}
+        for f in dataclasses.fields(PipelineStats):
+            k = f.name
+            if k in ("device_loads", "device_depth_max"):
+                out[k] = [x for s in snapshots for x in s.get(k, [])]
+            elif k == "num_devices":
+                out[k] = sum(s.get(k, 0) for s in snapshots)
+            elif k in PipelineStats.GAUGE_FIELDS:
+                out[k] = max((s.get(k, 0) for s in snapshots), default=0)
+            else:
+                out[k] = sum(s.get(k, 0) for s in snapshots)
+        out["overlap_efficiency"] = (
+            max(0.0, out["read_s"] - out["io_wait_s"]) / out["read_s"]
+            if out["read_s"] > 0 else 1.0)
+        return out
+
     def snapshot_since(self, base: dict) -> dict:
         """Per-run view on a long-lived (session) stats object: additive
         counters are diffed against ``base`` (a prior ``snapshot()``);
@@ -129,8 +157,12 @@ class PipelineStats:
                     or b is None:
                 out[k] = v
             elif isinstance(v, list):
-                out[k] = ([x - y for x, y in zip(v, b)]
-                          if len(v) == len(b) else v)
+                # per-device lists are RESET by init_devices each time a
+                # prefetcher attaches, so the current list already is the
+                # latest run's telemetry; subtracting a base captured
+                # before that reset (e.g. holding the build/layout pass's
+                # loads) would undercount whichever devices were busy then
+                out[k] = v
             else:
                 out[k] = v - b
         out["overlap_efficiency"] = (

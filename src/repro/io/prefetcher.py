@@ -42,6 +42,7 @@ import numpy as np
 
 from repro.io.buffer_pool import BufferPool
 from repro.io.pipeline import PipelineStats
+from repro.obs import get_tracer
 
 MAX_BATCH = 8  # reads per batched submission (io_uring SQ burst analogue)
 
@@ -54,7 +55,8 @@ class SchedulePrefetcher:
                  stats: PipelineStats | None = None,
                  pad_value: float = 0.0,
                  batch_reads: bool = False, coalesce: bool = False,
-                 max_batch: int = MAX_BATCH, close_pool: bool = True):
+                 max_batch: int = MAX_BATCH, close_pool: bool = True,
+                 tracer=None):
         """``close_pool=False`` marks ``pool`` as shared (owned by a
         ``DiskJoinIndex`` session, outliving this prefetcher): ``close()``
         then only wakes/cancels this prefetcher's waiters instead of
@@ -64,6 +66,7 @@ class SchedulePrefetcher:
         self.close_pool = bool(close_pool)
         self.lookahead = max(1, int(lookahead))
         self.stats = stats if stats is not None else PipelineStats()
+        self.tracer = tracer if tracer is not None else get_tracer()
         self.pad_value = pad_value
         self.coalesce = bool(coalesce)
         self.batch_reads = bool(batch_reads) or self.coalesce
@@ -114,9 +117,10 @@ class SchedulePrefetcher:
                         return
                 # backpressure: blocks when full; on a shared pool the wait
                 # is cancellable so close() never strands this thread
-                slot = self.pool.acquire(
-                    cancelled=None if self.close_pool
-                    else (lambda: self._closed))
+                with self.tracer.span("io.acquire", bucket=loads[k]):
+                    slot = self.pool.acquire(
+                        cancelled=None if self.close_pool
+                        else (lambda: self._closed))
                 dev = self._device_of(loads[k])
                 group = [(k, loads[k], slot)]
                 if self.batch_reads:
@@ -204,7 +208,13 @@ class SchedulePrefetcher:
             for _, _, slot in run:
                 self.pool.unpin(slot)
             results = [(k, e) for k, _, _ in run]
-        self.stats.add("read_s", time.perf_counter() - t0)
+        dt = time.perf_counter() - t0
+        self.stats.add("read_s", dt)
+        # complete() replays the exact interval read_s accumulated, so the
+        # trace-derived hidden_fraction and overlap_efficiency see one
+        # measurement, not two clocks
+        self.tracer.complete("io.read", t0, dt, dev=dev,
+                             buckets=[b for _, b, _ in run])
         self.stats.count_device_loads(dev, len(run))
         with self._cond:
             self._dev_inflight[dev] -= len(run)
@@ -273,7 +283,7 @@ class PrefetchedBucketCache:
                  num_threads: int = 2, pad_value: float = 0.0,
                  batch_reads: bool = False, coalesce: bool = False,
                  stats: PipelineStats | None = None,
-                 pool: BufferPool | None = None):
+                 pool: BufferPool | None = None, tracer=None):
         """``pool``: an externally-owned (session) pool to read into —
         slab shape must match (``capacity_rows`` × ``store.dim``); it is
         left open by ``close()``. Without it a private pool of
@@ -298,7 +308,7 @@ class PrefetchedBucketCache:
             store, actions, self.pool, lookahead=lookahead,
             num_threads=num_threads, stats=self.stats, pad_value=pad_value,
             batch_reads=batch_reads, coalesce=coalesce,
-            close_pool=self._owns_pool)
+            close_pool=self._owns_pool, tracer=tracer)
         self._slots: dict[int, tuple[int, int]] = {}  # bucket -> (slot, rows)
         self.loads = 0
 

@@ -1,0 +1,49 @@
+"""repro.obs — span tracing, Perfetto export, and session metrics.
+
+See ``src/repro/obs/README.md`` for the span taxonomy and metrics
+naming conventions, and ``examples/quickstart.py`` for the two-line
+"observe your join" recipe::
+
+    from repro.obs import trace_session
+    with trace_session() as tracer:
+        index.self_join(epsilon=eps)
+    tracer.export("join.trace.json")      # open in ui.perfetto.dev
+    print(tracer.analysis().summary())
+"""
+from repro.obs.tracer import (
+    NOOP_SPAN,
+    Tracer,
+    disable_tracing,
+    enable_tracing,
+    get_tracer,
+    trace_session,
+)
+from repro.obs.export import (
+    TraceAnalysis,
+    export_chrome_trace,
+    validate_chrome_trace,
+)
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    log_bounds,
+)
+
+__all__ = [
+    "NOOP_SPAN",
+    "Tracer",
+    "get_tracer",
+    "enable_tracing",
+    "disable_tracing",
+    "trace_session",
+    "TraceAnalysis",
+    "export_chrome_trace",
+    "validate_chrome_trace",
+    "MetricsRegistry",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "log_bounds",
+]

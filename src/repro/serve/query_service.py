@@ -68,6 +68,10 @@ class VectorQueryService:
         self._waves: deque[tuple[int, float]] = deque(
             maxlen=int(latency_window))
         self._lock = threading.Lock()
+        # request counts + latency percentiles on the session's metrics
+        # surface, alongside the pipeline/io/scheduler sections
+        self._metrics_key = index.metrics.register_provider(
+            "service", self._metrics_section)
 
     # -- serving --------------------------------------------------------------
     def query(self, q: np.ndarray, epsilon: float | None = None,
@@ -111,6 +115,22 @@ class VectorQueryService:
         return out
 
     # -- telemetry ------------------------------------------------------------
+    def _metrics_section(self) -> dict:
+        """Provider for the index session's ``MetricsRegistry``: request
+        count and true per-request latency percentiles."""
+        with self._lock:
+            lats = np.asarray(self._latencies, np.float64)
+            requests = self.requests
+        return {
+            "requests": requests,
+            "latency_p50_ms": (float(np.percentile(lats, 50)) * 1e3
+                               if lats.size else 0.0),
+            "latency_p95_ms": (float(np.percentile(lats, 95)) * 1e3
+                               if lats.size else 0.0),
+            "latency_p99_ms": (float(np.percentile(lats, 99)) * 1e3
+                               if lats.size else 0.0),
+        }
+
     def snapshot(self) -> dict:
         """Service counters + the index session's PipelineStats (one
         surface for online reads and batch-join loads). ``latency_*`` are
@@ -145,3 +165,4 @@ class VectorQueryService:
         its owner closes it; the index always belongs to the caller)."""
         if self._owns_scheduler and self.scheduler is not None:
             self.scheduler.close()
+        self.index.metrics.unregister_provider(self._metrics_key)

@@ -33,6 +33,8 @@ import time
 import numpy as np
 
 from repro.core.index import DiskJoinIndex
+from repro.io import PipelineStats
+from repro.obs import MetricsRegistry
 from repro.serve.scheduler import QueryScheduler, _check_k, order_result
 
 _EMPTY = (np.zeros(0, np.int64), np.zeros(0, np.float32))
@@ -194,8 +196,25 @@ class IndexRouter:
         return [f.result(timeout=timeout) for f in futs]
 
     # -- telemetry / lifecycle ------------------------------------------------
+    def pipeline_snapshot(self) -> dict:
+        """Fleet-level ``PipelineStats`` rollup over every shard session
+        (``PipelineStats.merge``: counters sum, gauges max, per-device
+        lists concatenate — shards own distinct devices)."""
+        return PipelineStats.merge([s.stats.snapshot()
+                                    for s in self.shards])
+
+    def metrics_snapshot(self) -> dict:
+        """Fleet-level ``MetricsRegistry`` rollup over the shards'
+        sessions, with the pipeline sections re-merged domain-aware."""
+        merged = MetricsRegistry.merge([s.metrics_snapshot()
+                                        for s in self.shards])
+        if isinstance(merged.get("pipeline"), list):
+            merged["pipeline"] = PipelineStats.merge(merged["pipeline"])
+        return merged
+
     def snapshot(self) -> dict:
-        """Router fan-out counters plus every shard scheduler's snapshot."""
+        """Router fan-out counters plus every shard scheduler's snapshot
+        and the merged fleet pipeline view."""
         return {
             "requests": self.requests,
             "scattered": self.scattered,
@@ -203,6 +222,7 @@ class IndexRouter:
             if self.requests else 0.0,
             "num_shards": len(self.shards),
             "shards": [s.snapshot() for s in self.schedulers],
+            "pipeline": self.pipeline_snapshot(),
         }
 
     def close(self) -> None:

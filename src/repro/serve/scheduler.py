@@ -56,6 +56,7 @@ import numpy as np
 
 from repro.core.index import DiskJoinIndex
 from repro.core.types import BUILD_TIME_FIELDS, QUERY_TIME_FIELDS
+from repro.obs import get_tracer
 
 
 class DeadlineExceeded(Exception):
@@ -128,6 +129,7 @@ class _Request:
     enqueue_t: float
     deadline_t: float | None
     future: QueryFuture
+    rid: int = 0                  # request id: links trace async events
 
 
 class QueryScheduler:
@@ -186,9 +188,14 @@ class QueryScheduler:
         self.rejected = 0
         self.deadline_drops = 0
         self.waves = 0
+        self._rid = 0            # request ids for trace async linkage
         self._latencies: deque[float] = deque(maxlen=int(latency_window))
         self._wave_hist: deque[tuple[int, float]] = deque(
             maxlen=int(latency_window))
+        # fold wave/latency counters into the session's metrics surface;
+        # keep the returned (possibly suffixed) key for close()
+        self._metrics_key = index.metrics.register_provider(
+            "scheduler", self._metrics_section)
         self._drain = threading.Thread(target=self._drain_loop,
                                        name="diskjoin-serve-drain",
                                        daemon=True)
@@ -247,8 +254,13 @@ class QueryScheduler:
                     self.rejected += 1
                 raise SchedulerQueueFull(
                     f"request queue full ({self.max_queue} pending)")
+            self._rid += 1
+            req.rid = self._rid
             self._queue.append(req)
             self._cond.notify_all()
+        # async begin on the submitter thread; the matching end fires on
+        # the drain thread (with the wave id) — one interval per request
+        get_tracer().async_begin("serve.request", req.rid)
         with self._stats_lock:
             self.submitted += 1
         return fut
@@ -296,42 +308,50 @@ class QueryScheduler:
     # -- wave execution -------------------------------------------------------
     def _run_wave(self, wave: list[_Request]) -> None:
         t0 = time.perf_counter()
-        # transition every member to RUNNING: a client that cancel()ed a
-        # pending future drops out here, and no later cancel can race the
-        # set_result/set_exception below (InvalidStateError-free)
-        wave = [r for r in wave
-                if r.future.set_running_or_notify_cancel()]
-        live: list[_Request] = []
-        drops = 0
-        for r in wave:
-            if r.deadline_t is not None and t0 > r.deadline_t:
-                r.future.latency_s = t0 - r.enqueue_t
-                r.future.set_exception(DeadlineExceeded(
-                    f"deadline passed {t0 - r.deadline_t:.4f}s before the "
-                    f"wave started (no read was issued)"))
-                drops += 1
-            else:
-                live.append(r)
-        if drops:
-            self.index.stats.add("deadline_drops", drops)
-            with self._stats_lock:
-                self.deadline_drops += drops
+        tracer = get_tracer()
+        with self._stats_lock:
+            wave_id = self.waves + 1
+        with tracer.span("serve.wave", wave=wave_id, size=len(wave)):
+            # transition every member to RUNNING: a client that cancel()ed
+            # a pending future drops out here, and no later cancel can race
+            # the set_result/set_exception below (InvalidStateError-free)
+            wave = [r for r in wave
+                    if r.future.set_running_or_notify_cancel()]
+            live: list[_Request] = []
+            drops = 0
+            for r in wave:
+                if r.deadline_t is not None and t0 > r.deadline_t:
+                    r.future.latency_s = t0 - r.enqueue_t
+                    r.future.set_exception(DeadlineExceeded(
+                        f"deadline passed {t0 - r.deadline_t:.4f}s before "
+                        f"the wave started (no read was issued)"))
+                    tracer.async_end("serve.request", r.rid, wave=wave_id,
+                                     dropped=True)
+                    drops += 1
+                else:
+                    live.append(r)
+            if drops:
+                self.index.stats.add("deadline_drops", drops)
+                with self._stats_lock:
+                    self.deadline_drops += drops
 
-        # group by effective query-time config: probe sharing needs one
-        # plan/execute cycle per config (most traffic uses the defaults
-        # and lands in a single group)
-        groups: dict[tuple, list[_Request]] = {}
-        for r in live:
-            groups.setdefault(r.overrides, []).append(r)
-        for key, members in groups.items():
-            self._run_group(dict(key), members)
+            # group by effective query-time config: probe sharing needs one
+            # plan/execute cycle per config (most traffic uses the defaults
+            # and lands in a single group)
+            groups: dict[tuple, list[_Request]] = {}
+            for r in live:
+                groups.setdefault(r.overrides, []).append(r)
+            for key, members in groups.items():
+                self._run_group(dict(key), members, wave_id)
 
         self.index.stats.add("waves", 1)
         with self._stats_lock:
             self.waves += 1
             self._wave_hist.append((len(wave), time.perf_counter() - t0))
 
-    def _run_group(self, ov: dict, members: list[_Request]) -> None:
+    def _run_group(self, ov: dict, members: list[_Request],
+                   wave_id: int = 0) -> None:
+        tracer = get_tracer()
         Q = np.stack([r.q for r in members])
         try:
             plan = self.index.plan_probes(Q, **ov)
@@ -354,6 +374,8 @@ class QueryScheduler:
             for r in members:
                 r.future.latency_s = now - r.enqueue_t
                 r.future.set_exception(e)
+                tracer.async_end("serve.request", r.rid, wave=wave_id,
+                                 error=type(e).__name__)
             return
         now = time.perf_counter()
         lats = []
@@ -361,11 +383,33 @@ class QueryScheduler:
             r.future.latency_s = now - r.enqueue_t
             lats.append(r.future.latency_s)
             r.future.set_result(order_result(ids, dists, r.k))
+            tracer.async_end("serve.request", r.rid, wave=wave_id)
         with self._stats_lock:
             self.completed += len(members)
             self._latencies.extend(lats)
 
     # -- telemetry / lifecycle ------------------------------------------------
+    def _metrics_section(self) -> dict:
+        """Provider for the index session's ``MetricsRegistry``: the
+        scheduler's counters, latency percentiles and wave summary —
+        without the pipeline section the registry already carries."""
+        with self._stats_lock:
+            lats = np.asarray(self._latencies, np.float64)
+            waves = list(self._wave_hist)
+            d = {
+                "submitted": self.submitted,
+                "completed": self.completed,
+                "rejected": self.rejected,
+                "deadline_drops": self.deadline_drops,
+                "waves": self.waves,
+            }
+        d["latency_p50_ms"] = (float(np.percentile(lats, 50)) * 1e3
+                               if lats.size else 0.0)
+        d["latency_p95_ms"] = (float(np.percentile(lats, 95)) * 1e3
+                               if lats.size else 0.0)
+        d["wave"] = summarize_waves(waves)
+        return d
+
     def snapshot(self) -> dict:
         """Scheduler counters, true per-request latency percentiles, the
         per-wave histogram summary, and the index session's PipelineStats
@@ -401,6 +445,9 @@ class QueryScheduler:
             self._closed = True
             self._cond.notify_all()
         self._drain.join()
+        # a closed scheduler must not linger on the session's metrics
+        # surface (tests open several schedulers per index)
+        self.index.metrics.unregister_provider(self._metrics_key)
 
     def __enter__(self) -> "QueryScheduler":
         return self
