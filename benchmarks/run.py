@@ -25,8 +25,8 @@ from benchmarks import (common, fig7_baselines, fig8_recall, fig9_memory,
                         fig13_crossjoin, fig14_fragmentation, fig15_io,
                         fig17_ablation, fig18_pruning, fig19_pipeline,
                         fig20_striping, fig21_online, fig22_scheduler,
-                        fig23_device_pipeline, kernel_roofline, obs_trace,
-                        randomness)
+                        fig23_device_pipeline, fig24_planner,
+                        kernel_roofline, obs_trace, randomness)
 
 MODULES = [
     ("fig7_baselines", fig7_baselines),
@@ -45,6 +45,7 @@ MODULES = [
     ("fig21_online", fig21_online),
     ("fig22_scheduler", fig22_scheduler),
     ("fig23_device_pipeline", fig23_device_pipeline),
+    ("fig24_planner", fig24_planner),
     ("obs_trace", obs_trace),
     ("randomness", randomness),
     ("kernel_roofline", kernel_roofline),

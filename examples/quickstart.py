@@ -84,6 +84,14 @@ def main() -> None:
           f"references ({pipe['h2d_transfers_saved']} re-stagings avoided, "
           f"{pipe['d2h_bytes'] / 1e6:.1f} MB compacted results fetched)")
 
+    # -- explain the plan: estimate-driven knobs instead of hand tuning ------
+    planned = index.self_join(plan_mode="on", compute_mode="auto")
+    assert np.array_equal(planned.pairs, result.pairs)   # plans never
+    assert np.array_equal(planned.distances, result.distances)  # change results
+    print("\nplanner (plan_mode='on', compute_mode='auto'):")
+    print(planned.plan.explain())   # pair_cap / routing / batching decisions,
+                                    # each with the estimate that drove it
+
     # -- online point queries: same pool, same telemetry surface -------------
     svc = VectorQueryService(index)
     q = x[1234]

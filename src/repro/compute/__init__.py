@@ -10,11 +10,11 @@ path; both produce byte-identical results and are selected by
 slab-pool lifecycle.
 """
 from repro.compute.engine import (PAIR_CAP_INIT, DeviceVerifyEngine,
-                                  HostVerifyEngine, compact_pairs,
-                                  make_verify_engine, next_pow2,
-                                  query_verify_compact)
+                                  HostVerifyEngine, RoutedVerifyEngine,
+                                  compact_pairs, make_verify_engine,
+                                  next_pow2, query_verify_compact)
 from repro.compute.slab_pool import DeviceSlabPool
 
 __all__ = ["DeviceSlabPool", "DeviceVerifyEngine", "HostVerifyEngine",
-           "PAIR_CAP_INIT", "compact_pairs", "make_verify_engine",
-           "next_pow2", "query_verify_compact"]
+           "PAIR_CAP_INIT", "RoutedVerifyEngine", "compact_pairs",
+           "make_verify_engine", "next_pow2", "query_verify_compact"]

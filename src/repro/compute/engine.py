@@ -182,6 +182,16 @@ class _EngineBase:
     def evict(self, b: int) -> None:  # device engine overrides
         pass
 
+    def set_verify_batch(self, n: int) -> None:
+        """Planner hook: retune the flush threshold between enqueues
+        (per schedule region). Only the threshold moves — a pending
+        batch larger than the new value flushes at the next enqueue."""
+        self.verify_batch = max(1, int(n))
+
+    def set_route(self, route: str) -> None:
+        """Planner hook: a single-mode engine ignores routing (the
+        routed wrapper overrides)."""
+
     @property
     def pending(self) -> bool:
         raise NotImplementedError
@@ -196,6 +206,11 @@ class HostVerifyEngine(_EngineBase):
                            np.float32)
         self._v = np.empty_like(self._u)
         self._batch: list[tuple] = []  # (entry_a, entry_b, intra)
+
+    def set_verify_batch(self, n: int) -> None:
+        # the staging buffers were sized at construction: a larger plan
+        # batch clamps to the allocation rather than reallocating
+        self.verify_batch = max(1, min(int(n), self._u.shape[0]))
 
     @property
     def pending(self) -> bool:
@@ -218,8 +233,11 @@ class HostVerifyEngine(_EngineBase):
         E = len(self._batch)
         # partial flushes dispatch at the next pow2 lane count; lanes past
         # E hold stale staging content and are masked out by the per-edge
-        # extraction below (no edge-0 replay, no duplicate verification)
-        B = min(self.verify_batch, next_pow2(E))
+        # extraction below (no edge-0 replay, no duplicate verification).
+        # Clamp to the staging allocation, not the current threshold — a
+        # planner region switch may shrink the threshold below a batch
+        # accumulated under the previous region's (larger) one.
+        B = min(self._u.shape[0], next_pow2(E))
         for i, (ea, eb, _) in enumerate(self._batch):
             self._u[i] = ea[0]
             self._v[i] = eb[0]
@@ -344,7 +362,9 @@ class DeviceVerifyEngine(_EngineBase):
         span.__enter__()
         t0 = time.perf_counter()
         E = len(self._batch)
-        B = min(self.verify_batch, next_pow2(E))
+        # pow2 of the actual batch, never below it: the threshold may
+        # have been retuned (planner region switch) below the pending E
+        B = next_pow2(E)
 
         def fresh(b, captured):
             # operands were captured at enqueue, possibly before the
@@ -452,14 +472,89 @@ class DeviceVerifyEngine(_EngineBase):
         self.pool.clear()
 
 
+class RoutedVerifyEngine:
+    """Mixed host/device routing under one engine surface.
+
+    The planner's ``JoinPlan`` may route each verify unit to whichever
+    path models cheaper; this wrapper owns one engine of each kind and
+    forwards every enqueue to the route selected via ``set_route``
+    (called by the executor from the plan cursor, immediately before the
+    enqueue). Cache evictions reach both engines — the device slab pool
+    must mirror the host cache schedule even for buckets whose edges all
+    ran host-side — and results concatenate: duplicate pairs across the
+    two engines carry byte-identical distances (both paths take d² from
+    the same jitted program + IEEE f32 sqrt), so the executor's
+    ``dedup_pairs`` is order-insensitive and planner-on results stay
+    byte-identical to single-engine runs.
+    """
+
+    def __init__(self, host: HostVerifyEngine, device: DeviceVerifyEngine):
+        self.host = host
+        self.device = device
+        self._target = host
+
+    def set_route(self, route: str) -> None:
+        self._target = self.device if route == "device" else self.host
+
+    def set_verify_batch(self, n: int) -> None:
+        self._target.set_verify_batch(n)
+
+    def enqueue(self, bu: int, bv: int, intra: bool) -> None:
+        self._target.enqueue(bu, bv, intra)
+
+    def flush(self) -> None:
+        self.host.flush()
+        self.device.flush()
+
+    def finish(self) -> None:
+        self.host.finish()
+        self.device.finish()
+
+    def abort(self) -> None:
+        self.host.abort()
+        self.device.abort()
+
+    def evict(self, b: int) -> None:
+        self.host.evict(b)
+        self.device.evict(b)
+
+    @property
+    def pending(self) -> bool:
+        return self.host.pending or self.device.pending
+
+    @property
+    def dc(self) -> int:
+        return self.host.dc + self.device.dc
+
+    @property
+    def compute_s(self) -> float:
+        return self.host.compute_s + self.device.compute_s
+
+    def results(self) -> tuple[list[np.ndarray], list[np.ndarray]]:
+        hp, hd = self.host.results()
+        dp, dd = self.device.results()
+        return hp + dp, hd + dd
+
+
 def make_verify_engine(config, cache, capacity_rows: int, dim: int,
-                       attribute_mask=None, pstats=None, tracer=None):
-    """Engine per ``JoinConfig.compute_mode`` ("host" | "device")."""
-    cls = (DeviceVerifyEngine if config.compute_mode == "device"
-           else HostVerifyEngine)
-    return cls(cache, epsilon=float(config.epsilon),
-               capacity_rows=capacity_rows, dim=dim,
-               verify_batch=int(config.verify_batch),
-               use_pallas=bool(config.use_pallas),
-               attribute_mask=attribute_mask, pstats=pstats,
-               tracer=tracer, xfer_gb_s=float(config.emulate_xfer_gb_s))
+                       attribute_mask=None, pstats=None, tracer=None,
+                       plan=None):
+    """Engine per ``JoinConfig.compute_mode`` ("host" | "device"), or per
+    the ``JoinPlan``'s resolved routing when one is supplied: the plan's
+    ``pair_cap`` seeds the device compaction capacity, and a "mixed"
+    plan gets a ``RoutedVerifyEngine`` wrapping one engine of each kind.
+    """
+    kw = dict(epsilon=float(config.epsilon), capacity_rows=capacity_rows,
+              dim=dim, verify_batch=int(config.verify_batch),
+              use_pallas=bool(config.use_pallas),
+              attribute_mask=attribute_mask, pstats=pstats,
+              tracer=tracer, xfer_gb_s=float(config.emulate_xfer_gb_s))
+    mode = plan.compute_mode if plan is not None else config.compute_mode
+    pair_cap = plan.pair_cap if plan is not None else None
+    if mode == "mixed":
+        return RoutedVerifyEngine(
+            HostVerifyEngine(cache, **kw),
+            DeviceVerifyEngine(cache, pair_cap=pair_cap, **kw))
+    if mode == "device":
+        return DeviceVerifyEngine(cache, pair_cap=pair_cap, **kw)
+    return HostVerifyEngine(cache, **kw)

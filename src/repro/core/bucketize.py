@@ -130,7 +130,7 @@ def write_buckets(store: FlatVectorStore, out_path: str,
 
 
 def bucketize(store: FlatVectorStore, out_path: str, config: JoinConfig,
-              layout_order_fn=None
+              layout_order_fn=None, sketch_sink=None
               ) -> tuple["BucketedVectorStore | StripedBucketedVectorStore",
                          BucketMeta, dict]:
     """Full 3-scan bucketization → (bucketed store, metadata, timings).
@@ -146,6 +146,12 @@ def bucketize(store: FlatVectorStore, out_path: str, config: JoinConfig,
     ``ordering.compute_node_order``) so the writer can make
     schedule-adjacent buckets disk-adjacent. Striping (``config.io_devices
     > 1``) applies whether or not a layout order is supplied.
+
+    ``sketch_sink(assignment, num_buckets) -> None``: called with the
+    FINAL assignment (after oversize splitting and empty-bucket
+    compaction) so the planner's cardinality sketch can sample the flat
+    store directly — at build time the bucketed store doesn't exist yet,
+    and resampling it later would pay one read per bucket.
     """
     timings: dict[str, float] = {}
     n_buckets = config.resolve_num_buckets(store.num_vectors)
@@ -185,6 +191,11 @@ def bucketize(store: FlatVectorStore, out_path: str, config: JoinConfig,
                                  radii[nonempty])
 
     meta = BucketMeta(centers=centers, radii=radii, sizes=sizes)
+
+    if sketch_sink is not None:
+        t0 = time.perf_counter()
+        sketch_sink(assignment, int(centers.shape[0]))
+        timings["sketch"] = time.perf_counter() - t0
 
     layout_order = None
     if layout_order_fn is not None:

@@ -104,7 +104,8 @@ class JoinExecutor:
     def __init__(self, store: BucketedVectorStore, meta: BucketMeta,
                  config: JoinConfig,
                  attribute_mask: np.ndarray | None = None,
-                 shared_pool=None, shared_stats=None, tracer=None):
+                 shared_pool=None, shared_stats=None, tracer=None,
+                 planner=None):
         """``attribute_mask``: (N,) bool — attribute filtering (paper §3
         extension): vectors failing the predicate are excluded from
         verification via a bitmap, before any distance is computed.
@@ -114,13 +115,19 @@ class JoinExecutor:
         online point queries then share one memory budget and one
         telemetry surface. The pool is used only when its slab shape and
         size fit this run (otherwise a private pool is created; the stats
-        are shared regardless)."""
+        are shared regardless).
+
+        ``planner``: a ``repro.plan.Planner`` (usually the index
+        session's) consulted when ``config.plan_mode == "on"``; with
+        plan_mode on and no planner supplied, one is built lazily by
+        sampling the bucketed store (the one-shot / cross-join path)."""
         self.store = store
         self.meta = meta
         self.config = config
         self.attribute_mask = attribute_mask
         self.shared_pool = shared_pool
         self.shared_stats = shared_stats
+        self.planner = planner
         self.tracer = tracer if tracer is not None else get_tracer()
         cap = resolve_bucket_capacity(config, meta.sizes)
         self.bucket_capacity = cap
@@ -155,7 +162,7 @@ class JoinExecutor:
         """Cache backend per JoinConfig.io_mode (+ pipeline stats or None)."""
         if self.config.io_mode != "prefetch":
             stats = self.shared_stats
-            if stats is None and self.config.compute_mode == "device":
+            if stats is None and self.config.compute_mode != "host":
                 # device telemetry (h2d/compaction counters) needs a
                 # stats surface even without the prefetch pipeline
                 from repro.io import PipelineStats
@@ -183,6 +190,21 @@ class JoinExecutor:
             tracer=self.tracer)
         return cache, stats
 
+    def _resolve_planner(self, pstats):
+        """The session planner when given, else (plan_mode on) a lazily
+        built one sampling this executor's store — the one-shot and
+        cross-join paths, whose stores have no persisted sketch."""
+        if self.planner is not None or self.config.plan_mode != "on":
+            return self.planner
+        from repro.plan import CardinalityEstimator, CostModel, Planner
+        est = CardinalityEstimator.sample_bucketed(
+            self.store, self.meta.sizes, seed=self.config.seed)
+        cost = CostModel.from_telemetry(
+            self.config, pstats.snapshot() if pstats is not None else None)
+        self.planner = Planner(est, cost, tracer=self.tracer,
+                               pstats=pstats)
+        return self.planner
+
     def run(self, graph: BucketGraph,
             node_order: np.ndarray | None = None) -> JoinResult:
         tasks, access_seq, schedule, plan_seconds = self.plan(graph,
@@ -192,10 +214,17 @@ class JoinExecutor:
         # report per-run numbers: diff against a baseline at the end
         pstats_base = (pstats.snapshot() if pstats is not None
                        and self.shared_stats is not None else None)
+        jplan = None
+        if self.config.plan_mode == "on":
+            planner = self._resolve_planner(pstats)
+            jplan = planner.plan_join(tasks, schedule.actions, self.meta,
+                                      self.config, self.bucket_capacity,
+                                      intra_join=self.intra_join)
         engine = make_verify_engine(self.config, cache,
                                     self.bucket_capacity, self.store.dim,
                                     attribute_mask=self.attribute_mask,
-                                    pstats=pstats, tracer=self.tracer)
+                                    pstats=pstats, tracer=self.tracer,
+                                    plan=jplan)
 
         tracer = self.tracer
         run_span = tracer.span("join.run", edges=graph.num_edges,
@@ -232,17 +261,33 @@ class JoinExecutor:
                 # must agree with overlap_efficiency by construction
                 tracer.complete("io.wait", t0, dt, bucket=b)
 
+        # plan cursor: unit_params is in exact enqueue order (the planner
+        # replayed this same task walk), so consumption is a single index
+        ui = 0
+        unit_params = jplan.unit_params if jplan is not None else None
+
+        def tune() -> None:
+            nonlocal ui
+            route, vb = unit_params[ui]
+            ui += 1
+            engine.set_route(route)
+            engine.set_verify_batch(vb)
+
         try:
             for task in tasks:
                 if task[0] == "touch":
                     b = int(task[1])
                     ensure(b)
                     if self.intra_join and cache.rows(b) >= 2:
+                        if unit_params is not None:
+                            tune()
                         engine.enqueue(b, b, True)
                 else:
                     _, u, v = task
                     ensure(int(u))
                     ensure(int(v))
+                    if unit_params is not None:
+                        tune()
                     engine.enqueue(int(u), int(v), False)
             engine.finish()
         finally:
@@ -283,4 +328,5 @@ class JoinExecutor:
             bucket_loads=cache.loads,
             io_stats=io_stats,
             timings=timings,
+            plan=jplan,
         )

@@ -42,6 +42,7 @@ import os
 import tempfile
 import threading
 import time
+import warnings
 from collections import OrderedDict
 
 import numpy as np
@@ -60,6 +61,8 @@ from repro.core.types import (BUILD_TIME_FIELDS, QUERY_TIME_FIELDS,
                               resolve_cache_buckets, split_config)
 from repro.io import BufferPool, PipelineStats
 from repro.obs import MetricsRegistry, get_tracer
+from repro.plan import (SKETCH_FILE, CardinalityEstimator, CostModel,
+                        Planner)
 from repro.store.striped_store import StripedBucketedVectorStore
 from repro.store.vector_store import BucketedVectorStore, FlatVectorStore
 
@@ -107,6 +110,13 @@ class DiskJoinIndex:
         self._warm: OrderedDict[int, tuple[int, int]] = OrderedDict()
         self._warm_lock = threading.RLock()
         self._joins_active = 0
+        # cost-based planning (repro.plan): the sketch-backed estimator is
+        # session-lazy; _warm_quota is the PoolPlan's serving share of the
+        # slab budget (None = legacy all-but-reserve behavior)
+        self._estimator: CardinalityEstimator | None = None
+        self._estimator_lock = threading.Lock()
+        self._sketch_path = os.path.join(workdir, SKETCH_FILE)
+        self._warm_quota: int | None = None
         self._closed = False
 
     # -- construction ---------------------------------------------------------
@@ -162,13 +172,27 @@ class DiskJoinIndex:
                     plan_cache.update(order=order)
                     return order
 
+        # planner cardinality sketch: sampled from the FLAT store during
+        # bucketization (one gather, no bucketed-store reads), persisted
+        # next to the manifest so reattached sessions load it for free
+        sketch_box: dict = {}
+
+        def sketch_sink(assignment, num_buckets):
+            sketch_box["est"] = CardinalityEstimator.sample_flat(
+                store, assignment, num_buckets, seed=build_cfg.seed)
+
         t0 = time.perf_counter()
         bstore, meta, bt = bucketize(store, os.path.join(workdir, "buckets"),
-                                     config, layout_order_fn=layout_fn)
+                                     config, layout_order_fn=layout_fn,
+                                     sketch_sink=sketch_sink)
         build_seconds = time.perf_counter() - t0
 
         index = cls(workdir, bstore, meta, build_cfg, query_defaults,
                     build_timings=bt, build_seconds=build_seconds)
+        est = sketch_box.get("est")
+        if est is not None:
+            est.save(index._sketch_path)
+            index._estimator = est
         layout_kind = None
         if "graph" in plan_cache and query_defaults is not None:
             # the layout pass already planned the default-config join;
@@ -262,9 +286,31 @@ class DiskJoinIndex:
                              if layout_order is not None else None),
             "build_seconds": self.build_seconds,
             "build_timings": self.build_timings,
+            # additive (format stays v1): pre-sketch manifests simply
+            # lack the key and get a lazy rebuild on first planner use
+            "sketch": (self._sketch_manifest_entry()
+                       if self._estimator is not None else None),
         }
         with open(os.path.join(self.workdir, MANIFEST_NAME), "w") as f:
             json.dump(manifest, f)
+
+    def _sketch_manifest_entry(self) -> dict:
+        return {"file": SKETCH_FILE,
+                "sample_rows": int(self._estimator.sample_rows),
+                "seed": int(self._estimator.seed)}
+
+    def _note_sketch_in_manifest(self) -> None:
+        """Record a lazily-rebuilt sketch in the manifest (read-modify-
+        write of the JSON only — nothing else changes)."""
+        path = os.path.join(self.workdir, MANIFEST_NAME)
+        try:
+            with open(path) as f:
+                m = json.load(f)
+            m["sketch"] = self._sketch_manifest_entry()
+            with open(path, "w") as f:
+                json.dump(m, f)
+        except OSError:
+            pass  # read-only workdir: the in-memory sketch still serves
 
     # -- shape ---------------------------------------------------------------
     @property
@@ -281,6 +327,46 @@ class DiskJoinIndex:
 
     def _tracer(self):
         return self.tracer if self.tracer is not None else get_tracer()
+
+    # -- cost-based planning ---------------------------------------------------
+    @property
+    def estimator(self) -> CardinalityEstimator:
+        """The session's cardinality estimator (``repro.plan``), backed by
+        the persisted per-bucket sketch. Indexes built before sketches
+        existed get a one-time lazy rebuild from the bucketed store (with
+        a warning), and the rebuilt sketch is re-persisted so the cost is
+        paid once per index, not once per session."""
+        with self._estimator_lock:
+            if self._estimator is None:
+                if os.path.exists(self._sketch_path):
+                    self._estimator = CardinalityEstimator.load(
+                        self._sketch_path)
+                else:
+                    warnings.warn(
+                        f"index at {self.workdir} predates planner "
+                        f"sketches; rebuilding the cardinality sketch "
+                        f"from the bucketed store (one-time, "
+                        f"{self.meta.num_buckets} bucket reads)",
+                        stacklevel=2)
+                    self._estimator = CardinalityEstimator.sample_bucketed(
+                        self.store, self.meta.sizes,
+                        seed=self.build_config.seed)
+                    try:
+                        self._estimator.save(self._sketch_path)
+                    except OSError:
+                        pass  # read-only workdir
+                    else:
+                        self._note_sketch_in_manifest()
+            return self._estimator
+
+    def _planner_for(self, cfg: JoinConfig) -> Planner:
+        """A planner bound to this session's estimator and a cost model
+        calibrated from the session's telemetry + this call's emulation
+        knobs. Cheap to construct per call — the emulated link/latency
+        may differ between calls, so the cost model cannot be cached."""
+        cost = CostModel.from_telemetry(cfg, self.stats.snapshot())
+        return Planner(self.estimator, cost, tracer=self._tracer(),
+                       metrics=self.metrics, pstats=self.stats)
 
     # -- config resolution ---------------------------------------------------
     def _resolve(self, overrides: dict) -> JoinConfig:
@@ -339,17 +425,30 @@ class DiskJoinIndex:
     # -- session buffer pool --------------------------------------------------
     def _ensure_pool(self, cfg: JoinConfig) -> BufferPool:
         """The session's one BufferPool: sized for a batch join at these
-        query params plus warm-cache headroom; created on first use."""
+        query params plus warm-cache headroom; created on first use.
+
+        With ``plan_mode="on"`` (and no explicit ``io_pool_slabs``) the
+        split between the join working set and the serving warm cache
+        comes from the planner's ``PoolPlan`` — the warm share tracks the
+        observed per-wave bucket reuse instead of the fixed reserve."""
         with self._pool_lock:
             if self._pool is None:
                 cap_buckets = min(
                     resolve_cache_buckets(cfg, self.bucket_capacity,
                                           self.store.dim),
                     self.meta.num_buckets or 1)
-                slabs = cfg.io_pool_slabs
-                if slabs is None:
-                    slabs = cap_buckets + cfg.io_lookahead
-                slabs = max(slabs, cap_buckets + 1) + _WARM_RESERVE
+                if cfg.plan_mode == "on" and cfg.io_pool_slabs is None:
+                    pp = self._planner_for(cfg).plan_pool(
+                        cfg, cap_buckets, cfg.io_lookahead,
+                        self.stats.snapshot(), floor=_WARM_RESERVE)
+                    slabs = max(pp.num_slabs,
+                                cap_buckets + 1 + pp.warm_quota)
+                    self._warm_quota = pp.warm_quota
+                else:
+                    slabs = cfg.io_pool_slabs
+                    if slabs is None:
+                        slabs = cap_buckets + cfg.io_lookahead
+                    slabs = max(slabs, cap_buckets + 1) + _WARM_RESERVE
                 self._pool = BufferPool(slabs, self.bucket_capacity,
                                         self.store.dim)
             return self._pool
@@ -365,10 +464,12 @@ class DiskJoinIndex:
         graph, graph_s, gkey = self._graph_for(cfg)
         pool = (self._ensure_pool(cfg) if cfg.io_mode == "prefetch"
                 else None)
+        planner = (self._planner_for(cfg) if cfg.plan_mode == "on"
+                   else None)
         executor = JoinExecutor(self.store, self.meta, cfg,
                                 attribute_mask=attribute_mask,
                                 shared_pool=pool, shared_stats=self.stats,
-                                tracer=self._tracer())
+                                tracer=self._tracer(), planner=planner)
         node_order = self._order_for(graph, cfg, executor.cache_buckets,
                                      gkey)
         self._begin_join()
@@ -474,7 +575,8 @@ class DiskJoinIndex:
             return self._candidate_buckets(Q, cfg)
 
     def execute_probes(self, Q: np.ndarray, per_q: list[np.ndarray],
-                       epsilon: float | None = None, **overrides
+                       epsilon: float | None = None, cancel=None,
+                       **overrides
                        ) -> list[tuple[np.ndarray, np.ndarray]]:
         """Execute phase of ``query_batch``: read + verify planned probes.
 
@@ -484,6 +586,14 @@ class DiskJoinIndex:
         and (``io_mode="prefetch"``) the batching/coalescing prefetcher —
         and its resident slab is fanned out to every member query's
         verify. Returns one (ids, distances) pair per query, unsorted.
+
+        ``cancel(qi) -> bool``: optional mid-execution cancellation
+        probe, consulted as buckets are served — a cancelled query's
+        verify fan-out is skipped from then on (its result row comes
+        back possibly partial), and a bucket whose probing queries are
+        ALL cancelled is not even read (``midwave_skipped_reads``). The
+        wave scheduler uses this to stop working for requests whose
+        deadline expired mid-wave.
         """
         if epsilon is not None:
             overrides["epsilon"] = epsilon
@@ -492,7 +602,7 @@ class DiskJoinIndex:
         if len(per_q) != Q.shape[0]:
             raise ValueError(f"probe plan covers {len(per_q)} queries, "
                              f"got {Q.shape[0]} query vectors")
-        return self._execute_probes(Q, per_q, cfg)
+        return self._execute_probes(Q, per_q, cfg, cancel=cancel)
 
     def query_batch(self, Q: np.ndarray, epsilon: float | None = None,
                     **overrides) -> list[tuple[np.ndarray, np.ndarray]]:
@@ -506,10 +616,11 @@ class DiskJoinIndex:
         and recently-read buckets stay warm in pool slabs for subsequent
         queries (``execute_probes``). Returns one (ids, distances) pair
         per query, unsorted, with exact distances (perfect precision;
-        recall governed by ``recall_target``). With
-        ``compute_mode="device"`` distances are float32 (the verify
-        kernel's precision) rather than the host path's float64 —
-        borderline pairs within f32 rounding of ε may differ.
+        recall governed by ``recall_target``). Both compute modes apply
+        the ε-threshold in float32 (d² and ε² each rounded to f32) and
+        return float32 distances, so host and device agree on
+        membership; residual divergence on distance *values* is bounded
+        by the device kernel's f32 accumulation on near-zero pairs.
         """
         if epsilon is not None:
             overrides["epsilon"] = epsilon
@@ -519,15 +630,16 @@ class DiskJoinIndex:
         return self._execute_probes(Q, per_q, cfg)
 
     def _execute_probes(self, Q: np.ndarray, per_q: list[np.ndarray],
-                        cfg: JoinConfig
+                        cfg: JoinConfig, cancel=None
                         ) -> list[tuple[np.ndarray, np.ndarray]]:
         with self._tracer().span(
                 "query.execute", queries=Q.shape[0],
                 buckets=len({int(b) for ids in per_q for b in ids})):
-            return self._execute_probes_inner(Q, per_q, cfg)
+            return self._execute_probes_inner(Q, per_q, cfg,
+                                              cancel=cancel)
 
     def _execute_probes_inner(self, Q: np.ndarray, per_q: list[np.ndarray],
-                              cfg: JoinConfig
+                              cfg: JoinConfig, cancel=None
                               ) -> list[tuple[np.ndarray, np.ndarray]]:
         eps = float(cfg.epsilon)
         # bucket -> probing query rows; each distinct bucket is read once
@@ -536,30 +648,83 @@ class DiskJoinIndex:
             for b in ids:
                 probe.setdefault(int(b), []).append(qi)
 
+        # wave plan (plan_mode="on"): k_cap for the device query path
+        # from the estimate's upper bound, host/device resolution for
+        # compute_mode="auto", and the predicted seconds admission uses
+        wplan = None
+        compute = cfg.compute_mode
+        if cfg.plan_mode == "on":
+            wplan = self._planner_for(cfg).plan_wave(
+                Q, per_q, self.meta, cfg, self.bucket_capacity,
+                warm=set(self.warm_buckets()))
+            if compute == "auto":
+                compute = wplan.compute_mode
+        elif compute == "auto":  # unreachable via config validation
+            compute = "host"
+
+        # mid-execution cancellation: a query found cancelled stays
+        # cancelled (deadlines only ever recede into the past)
+        dead: set[int] = set()
+
+        def live_rows(b: int) -> list[int]:
+            qis = probe[b]
+            if cancel is None:
+                return qis
+            out = []
+            for qi in qis:
+                if qi in dead:
+                    continue
+                if cancel(qi):
+                    dead.add(qi)
+                    continue
+                out.append(qi)
+            return out
+
         acc_ids: list[list[np.ndarray]] = [[] for _ in range(Q.shape[0])]
         acc_d: list[list[np.ndarray]] = [[] for _ in range(Q.shape[0])]
+        # dtype parity with the device path: both query verify paths
+        # round d² to float32 and compare against ε² rounded exactly as
+        # the device program rounds it (the f64 python product cast ONCE
+        # to f32 — not np.float32(eps)**2, which can differ by 1 ulp).
+        # The host accumulates the a² − 2ab + b² expansion in f64 first:
+        # in f32 that expansion cancels catastrophically for near-zero
+        # distances, and the host path — which exists as the accuracy
+        # reference — must not inherit the kernel's cancellation error.
+        # Residual host/device divergence is therefore bounded by the
+        # device kernel's own f32 accumulation (≲1e-3 on distances),
+        # while threshold semantics (f32 d² vs f32 ε²) are identical.
+        eps2 = np.float32(float(eps) * float(eps))
 
         def verify(b: int, vecs: np.ndarray, ids_: np.ndarray,
                    n: int) -> None:
+            qidx = live_rows(b)
+            if not qidx:
+                return
             live, lids = vecs[:n], ids_[:n]
-            qidx = probe[b]
             qs = Q[qidx].astype(np.float64)
             lv = live.astype(np.float64)
-            d2 = ((qs * qs).sum(1)[:, None] - 2.0 * qs @ lv.T
+            d2 = ((qs * qs).sum(1)[:, None] - 2.0 * (qs @ lv.T)
                   + (lv * lv).sum(1)[None, :])
-            mask = d2 <= eps * eps
+            np.maximum(d2, 0.0, out=d2)
+            d2 = d2.astype(np.float32)
+            mask = d2 <= eps2
             for row, qi in enumerate(qidx):
                 m = mask[row]
                 if m.any():
                     acc_ids[qi].append(lids[m].astype(np.int64))
-                    acc_d[qi].append(
-                        np.sqrt(np.maximum(d2[row][m], 0.0))
-                        .astype(np.float32))
+                    acc_d[qi].append(np.sqrt(d2[row][m])
+                                     .astype(np.float32))
 
-        if cfg.compute_mode == "device":
-            verify = self._make_device_verify(Q, probe, eps, acc_ids, acc_d)
+        if compute == "device":
+            verify = self._make_device_verify(
+                Q, probe, eps, acc_ids, acc_d, live_rows=live_rows,
+                k_cap_init=(wplan.k_cap if wplan is not None else None))
+        skip = None
+        if cancel is not None:
+            def skip(b: int) -> bool:
+                return not live_rows(b)
         self._read_and_verify(self._sorted_by_layout(list(probe)), cfg,
-                              verify)
+                              verify, skip=skip)
         self.stats.add("queries", Q.shape[0])
 
         out = []
@@ -572,15 +737,23 @@ class DiskJoinIndex:
         return out
 
     def _make_device_verify(self, Q: np.ndarray, probe: dict, eps: float,
-                            acc_ids: list, acc_d: list):
+                            acc_ids: list, acc_d: list, live_rows=None,
+                            k_cap_init: int | None = None):
         """Device verify for a probe wave (``compute_mode="device"``):
         the wave's query block crosses H2D ONCE, each probed bucket's
         padded slab once, and the kernel hands back compacted
         (query row, bucket row, distance) triples — no per-bucket host
-        distance matrix. Distances are float32 (the kernel's precision);
-        the host path computes float64, so borderline pairs within f32
-        rounding of ε may differ between the modes here (the batch-join
-        engines are byte-identical — both run the same f32 kernel)."""
+        distance matrix. Both query paths compute d² in float32 (same
+        formulation, see ``_execute_probes_inner``), so host/device
+        results agree up to f32 matmul accumulation order — a few ulps
+        on d², which only borderline pairs within that tolerance of ε
+        can notice (the batch-join engines are byte-identical — both
+        take d² from the same jitted program).
+
+        ``k_cap_init`` seeds the compaction capacity from the wave
+        plan's estimate upper bound (``plan_mode="on"``) instead of the
+        fixed 256; overflow re-dispatch remains as the counted fallback.
+        """
         import jax
         import jax.numpy as jnp
 
@@ -591,10 +764,14 @@ class DiskJoinIndex:
         q_dev = jax.device_put(np.array(Q, np.float32))  # staged ONCE
         self.stats.add("h2d_transfers", 1)
         self.stats.add("h2d_bytes", int(Q.nbytes))
-        state = {"first": True, "k_cap": 256}
+        state = {"first": True, "k_cap": int(k_cap_init or 256)}
 
         def verify(b: int, vecs: np.ndarray, ids_: np.ndarray,
                    n: int) -> None:
+            rows_alive = (probe[b] if live_rows is None
+                          else live_rows(b))
+            if not rows_alive:
+                return
             if state["first"]:
                 state["first"] = False
             else:
@@ -610,7 +787,7 @@ class DiskJoinIndex:
             slab_dev = jax.device_put(np.array(slab, np.float32))
             self.stats.add("h2d_transfers", 1)
             self.stats.add("h2d_bytes", int(slab.nbytes))
-            qidx = np.asarray(probe[b], np.int32)
+            qidx = np.asarray(rows_alive, np.int32)
             nq = qidx.size
             idx = np.zeros(next_pow2(nq), np.int32)
             idx[:nq] = qidx
@@ -674,7 +851,7 @@ class DiskJoinIndex:
         return out
 
     def _read_and_verify(self, buckets: list[int], cfg: JoinConfig,
-                         verify) -> None:
+                         verify, skip=None) -> None:
         """Serve ``verify(b, vecs, ids, rows)`` for every bucket, routing
         reads through the session pool.
 
@@ -683,11 +860,18 @@ class DiskJoinIndex:
         reads hold at most one transient slab each and release it right
         after verification; when the pool is fully contended the read
         falls back to a plain store read (counted) instead of blocking —
-        queries therefore never hold-and-wait against the executor."""
+        queries therefore never hold-and-wait against the executor.
+
+        ``skip(b) -> bool``: consulted immediately before each bucket is
+        served (mid-wave cancellation) — a skipped warm bucket is simply
+        not verified; a skipped miss saves its read outright
+        (``midwave_skipped_reads``)."""
         pool = self._ensure_pool(cfg)
         warm_hits = 0
         misses: list[int] = []
         for b in buckets:
+            if skip is not None and skip(b):
+                continue
             with self._warm_lock:
                 ent = self._warm.get(b)
                 if ent is not None:
@@ -710,13 +894,19 @@ class DiskJoinIndex:
             return
 
         if cfg.io_mode == "prefetch" and len(misses) > 1:
-            self._read_misses_prefetch(misses, cfg, pool, verify)
+            self._read_misses_prefetch(misses, cfg, pool, verify,
+                                       skip=skip)
         else:
-            self._read_misses_sync(misses, pool, verify)
+            self._read_misses_sync(misses, pool, verify, skip=skip)
 
     def _read_misses_sync(self, misses: list[int], pool: BufferPool,
-                          verify) -> None:
+                          verify, skip=None) -> None:
         for b in misses:
+            if skip is not None and skip(b):
+                # every prober's deadline passed since the wave started:
+                # the read itself is saved, not just the verify
+                self.stats.add("midwave_skipped_reads", 1)
+                continue
             self._make_room(pool)
             slot = pool.try_acquire()
             if slot is None:
@@ -740,9 +930,12 @@ class DiskJoinIndex:
                 self._retain_or_release(b, slot, n, pool)
 
     def _read_misses_prefetch(self, misses: list[int], cfg: JoinConfig,
-                              pool: BufferPool, verify) -> None:
+                              pool: BufferPool, verify, skip=None) -> None:
         """Batch-friendly path: a schedule prefetcher overlaps the misses'
-        reads (per-device queues, batching/coalescing as configured)."""
+        reads (per-device queues, batching/coalescing as configured).
+        The prefetcher was already told the full miss list, so mid-wave
+        cancellation here skips only the verify fan-out — the slab still
+        lands (and stays warm for later waves), it just isn't scanned."""
         from repro.io import SchedulePrefetcher
         pf = SchedulePrefetcher(
             self.store, misses, pool, lookahead=cfg.io_lookahead,
@@ -755,7 +948,8 @@ class DiskJoinIndex:
                 b, slot, n = pf.pop_next()
                 self.stats.add("query_reads", 1)
                 try:
-                    verify(b, pool.vecs(slot), pool.ids(slot), n)
+                    if skip is None or not skip(b):
+                        verify(b, pool.vecs(slot), pool.ids(slot), n)
                 finally:
                     self._retain_or_release(b, slot, n, pool)
         finally:
@@ -765,9 +959,12 @@ class DiskJoinIndex:
     def _retain_or_release(self, b: int, slot: int, rows: int,
                            pool: BufferPool) -> None:
         """Keep a freshly-read slab warm for later queries when no batch
-        join needs the pool and headroom remains; else release it."""
+        join needs the pool and headroom remains; else release it. The
+        warm capacity is the planner's ``PoolPlan`` share when one sized
+        this pool, else the legacy all-but-reserve bound."""
         with self._warm_lock:
-            cap = pool.num_slabs - _WARM_RESERVE
+            cap = (self._warm_quota if self._warm_quota is not None
+                   else pool.num_slabs - _WARM_RESERVE)
             if (self._joins_active == 0 and b not in self._warm
                     and len(self._warm) < cap):
                 self._warm[b] = (slot, rows)

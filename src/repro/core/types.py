@@ -22,10 +22,18 @@ from typing import Optional
 import numpy as np
 
 
-def _validate_compute(compute_mode: str, verify_batch: int) -> None:
-    if compute_mode not in ("host", "device"):
-        raise ValueError(f"compute_mode must be 'host' or 'device', "
-                         f"got {compute_mode!r}")
+def _validate_compute(compute_mode: str, verify_batch: int,
+                      plan_mode: str = "off") -> None:
+    if compute_mode not in ("host", "device", "auto"):
+        raise ValueError(f"compute_mode must be 'host', 'device' or "
+                         f"'auto', got {compute_mode!r}")
+    if plan_mode not in ("off", "on"):
+        raise ValueError(f"plan_mode must be 'off' or 'on', "
+                         f"got {plan_mode!r}")
+    if compute_mode == "auto" and plan_mode != "on":
+        # "auto" is a planner decision, not an engine the executor can
+        # instantiate — without a plan there is nothing to resolve it
+        raise ValueError("compute_mode='auto' requires plan_mode='on'")
     if verify_batch < 1:
         raise ValueError(f"verify_batch must be >= 1, got {verify_batch}")
 
@@ -102,6 +110,13 @@ class JoinConfig:
         time) on hosts whose "device" is the same memory, exactly as
         ``emulate_read_latency_s`` restores the SSD regime on page-cached
         memmaps (benchmarks only; 0 disables).
+      plan_mode: "off" keeps every sizing knob hand-tuned (legacy);
+        "on" derives them from ``repro.plan`` — per-join ``pair_cap``
+        and per-region ``verify_batch`` from the cardinality estimate,
+        host/device verify routing from the cost model (enables
+        ``compute_mode="auto"``), pool split from predicted reuse. The
+        planner only sizes and places work: result pairs/distances are
+        byte-identical between "off" and "on".
     """
 
     epsilon: float
@@ -131,6 +146,7 @@ class JoinConfig:
     compute_mode: str = "host"
     verify_batch: int = 32
     emulate_xfer_gb_s: float = 0.0
+    plan_mode: str = "off"
 
     def __post_init__(self):
         if self.io_mode not in ("sync", "prefetch"):
@@ -141,7 +157,8 @@ class JoinConfig:
         if self.io_stripe_by not in ("phase", "hash"):
             raise ValueError(f"io_stripe_by must be 'phase' or 'hash', "
                              f"got {self.io_stripe_by!r}")
-        _validate_compute(self.compute_mode, self.verify_batch)
+        _validate_compute(self.compute_mode, self.verify_batch,
+                          self.plan_mode)
 
     def resolve_num_buckets(self, num_vectors: int) -> int:
         return _resolve_num_buckets(self.num_buckets, num_vectors)
@@ -218,12 +235,14 @@ class QueryConfig:
     compute_mode: str = "host"
     verify_batch: int = 32
     emulate_xfer_gb_s: float = 0.0
+    plan_mode: str = "off"
 
     def __post_init__(self):
         if self.io_mode not in ("sync", "prefetch"):
             raise ValueError(f"io_mode must be 'sync' or 'prefetch', "
                              f"got {self.io_mode!r}")
-        _validate_compute(self.compute_mode, self.verify_batch)
+        _validate_compute(self.compute_mode, self.verify_batch,
+                          self.plan_mode)
 
 
 def split_config(config: JoinConfig) -> tuple[BuildConfig, QueryConfig]:
@@ -331,6 +350,7 @@ class JoinResult:
     bucket_loads: int
     io_stats: dict
     timings: dict                     # phase -> seconds (TIMING_KEYS schema)
+    plan: object = None               # repro.plan.JoinPlan when plan_mode on
 
     @property
     def cache_hit_rate(self) -> float:

@@ -50,7 +50,14 @@ class PipelineStats:
     waves: int = 0                   # scheduler waves executed
     shared_probe_reads: int = 0      # distinct buckets probed per wave, summed
     reads_saved_by_sharing: int = 0  # per-query probe refs minus distinct
-    deadline_drops: int = 0          # requests expired & dropped pre-read
+    deadline_drops: int = 0          # requests expired & dropped (any stage)
+    deadline_drops_midwave: int = 0  # subset dropped after the wave's reads
+    midwave_skipped_reads: int = 0   # reads skipped: all probers cancelled
+    admission_rejects: int = 0       # requests refused by estimate admission
+    # cost-based planner (repro.plan): decisions taken per session
+    plans: int = 0                   # batch-join plans emitted
+    wave_plans: int = 0              # serving-wave plans emitted
+    planned_pair_cap: int = 0        # last planned compaction capacity
     # device verify pipeline (repro.compute, compute_mode="device"):
     # slab H2D transfers are bounded by cache residencies, not edge count
     h2d_transfers: int = 0           # host→device transfers issued
@@ -102,6 +109,7 @@ class PipelineStats:
     GAUGE_FIELDS = frozenset({
         "pool_slabs", "lookahead", "num_devices", "max_queue_depth",
         "max_slabs_in_use", "blocked_acquires", "device_depth_max",
+        "planned_pair_cap",
     })
 
     def snapshot(self) -> dict:

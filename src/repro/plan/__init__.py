@@ -1,0 +1,19 @@
+"""repro.plan — cost-based adaptive planning (see README.md).
+
+``CardinalityEstimator`` answers *how many pairs will this work emit*
+from per-bucket sample sketches; ``CostModel`` prices reads, transfers
+and verify paths from telemetry; ``Planner`` turns both into typed,
+explainable ``JoinPlan``/``WavePlan``/``PoolPlan`` objects the
+core/io/compute/serve layers consume instead of hand-tuned knobs.
+"""
+from repro.plan.cost_model import CostModel
+from repro.plan.estimator import (SKETCH_FILE, CardinalityEstimator,
+                                  PairEstimate)
+from repro.plan.planner import (Decision, JoinPlan, Planner, PoolPlan,
+                                WavePlan)
+
+__all__ = [
+    "CardinalityEstimator", "PairEstimate", "SKETCH_FILE",
+    "CostModel", "Planner", "JoinPlan", "WavePlan", "PoolPlan",
+    "Decision",
+]

@@ -13,11 +13,12 @@ for the request lifecycle.
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.query_service import VectorQueryService
 from repro.serve.router import IndexRouter, RouterFuture
-from repro.serve.scheduler import (DeadlineExceeded, QueryFuture,
-                                   QueryScheduler, SchedulerClosed,
-                                   SchedulerQueueFull, order_result)
+from repro.serve.scheduler import (AdmissionRejected, DeadlineExceeded,
+                                   QueryFuture, QueryScheduler,
+                                   SchedulerClosed, SchedulerQueueFull,
+                                   order_result)
 
 __all__ = ["Request", "ServeEngine", "VectorQueryService",
            "QueryScheduler", "QueryFuture", "IndexRouter", "RouterFuture",
-           "DeadlineExceeded", "SchedulerClosed", "SchedulerQueueFull",
-           "order_result"]
+           "AdmissionRejected", "DeadlineExceeded", "SchedulerClosed",
+           "SchedulerQueueFull", "order_result"]

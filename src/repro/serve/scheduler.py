@@ -21,7 +21,15 @@ exactly this setting.
      time-window trigger);
   3. **deadline** — requests whose deadline already passed are dropped
      *before any read* and resolve with ``DeadlineExceeded``
-     (``PipelineStats.deadline_drops``);
+     (``PipelineStats.deadline_drops``); requests that expire *mid-wave*
+     are cancelled between buckets — remaining reads for buckets only
+     they probe are skipped (``midwave_skipped_reads``) and their future
+     raises ``DeadlineExceeded`` too (``deadline_drops_midwave``).
+     With ``admission="estimate"`` the planner (``repro.plan``) predicts
+     each deadline request's wave service time at ``submit`` and sheds
+     predicted-doomed requests before they even enqueue
+     (``AdmissionRejected``, ``PipelineStats.admission_rejects``) —
+     distinct from the capacity bound ``SchedulerQueueFull``;
   4. **shared probe** — the wave is planned once
      (``DiskJoinIndex.plan_probes``: center index + triangle inequality +
      Eq. 3 pruning, no disk I/O), the per-query candidate-bucket sets are
@@ -60,7 +68,9 @@ from repro.obs import get_tracer
 
 
 class DeadlineExceeded(Exception):
-    """The request's deadline passed before its wave started reading."""
+    """The request's deadline passed before its wave started reading, or
+    (mid-wave cancellation) while the wave was still reading buckets —
+    the message says which."""
 
 
 class SchedulerClosed(RuntimeError):
@@ -69,6 +79,21 @@ class SchedulerClosed(RuntimeError):
 
 class SchedulerQueueFull(RuntimeError):
     """Admission control: the bounded request queue is at capacity."""
+
+
+class AdmissionRejected(RuntimeError):
+    """Estimate-based admission (``admission="estimate"``): the planner
+    predicts the request cannot meet its deadline, so it is shed at the
+    door before any queueing or disk read. Distinct from
+    ``SchedulerQueueFull`` — that is the *capacity* bound; this is the
+    *feasibility* bound. Carries the model's numbers so callers can
+    re-submit with a looser deadline."""
+
+    def __init__(self, msg: str, predicted_s: float | None = None,
+                 deadline_s: float | None = None):
+        super().__init__(msg)
+        self.predicted_s = predicted_s
+        self.deadline_s = deadline_s
 
 
 def _check_k(k) -> int | None:
@@ -145,6 +170,13 @@ class QueryScheduler:
         whatever is queued without waiting.
       max_queue: admission bound — ``submit`` raises
         ``SchedulerQueueFull`` beyond this many pending requests.
+      admission: "queue" (default) admits anything the queue has room
+        for; "estimate" additionally predicts each *deadline* request's
+        wave service time via the session planner (``repro.plan`` —
+        sketch-based probe cardinality x calibrated read/verify costs)
+        and raises ``AdmissionRejected`` when the prediction says the
+        deadline cannot be met even if the wave started immediately.
+        Requests without a deadline are never estimate-rejected.
       share_probes: plan the wave once and read each distinct bucket once
         (the point of this class). False executes members independently —
         wave batching without sharing, kept for A/B measurement
@@ -157,6 +189,7 @@ class QueryScheduler:
                  epsilon: float | None = None,
                  wave_size: int = 32, max_wait_s: float = 0.002,
                  max_queue: int = 1024, share_probes: bool = True,
+                 admission: str = "queue",
                  latency_window: int = 8192, **overrides):
         if wave_size < 1:
             raise ValueError(f"wave_size must be >= 1, got {wave_size}")
@@ -164,11 +197,15 @@ class QueryScheduler:
             raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         if max_wait_s < 0:
             raise ValueError(f"max_wait_s must be >= 0, got {max_wait_s}")
+        if admission not in ("queue", "estimate"):
+            raise ValueError(f"admission must be 'queue' or 'estimate', "
+                             f"got {admission!r}")
         self.index = index
         self.wave_size = int(wave_size)
         self.max_wait_s = float(max_wait_s)
         self.max_queue = int(max_queue)
         self.share_probes = bool(share_probes)
+        self.admission = admission
         self._check_overrides(overrides)
         self._overrides = dict(overrides)
         if epsilon is None and "epsilon" not in overrides \
@@ -186,7 +223,9 @@ class QueryScheduler:
         self.submitted = 0
         self.completed = 0
         self.rejected = 0
+        self.admission_rejects = 0
         self.deadline_drops = 0
+        self.deadline_drops_midwave = 0
         self.waves = 0
         self._rid = 0            # request ids for trace async linkage
         self._latencies: deque[float] = deque(maxlen=int(latency_window))
@@ -219,10 +258,14 @@ class QueryScheduler:
         """Enqueue one ε-range request → ``QueryFuture``.
 
         ``deadline_s`` is a relative deadline from now; a request whose
-        deadline passes while it waits is dropped before any disk read and
-        its future raises ``DeadlineExceeded``. Raises
+        deadline passes while it waits is dropped before any disk read
+        and its future raises ``DeadlineExceeded`` (a deadline that
+        expires while its wave is already reading cancels the remaining
+        work mid-wave and raises the same error). Raises
         ``SchedulerQueueFull`` when ``max_queue`` requests are pending
-        (admission control — shed load at the door, not after the reads).
+        (admission control — shed load at the door, not after the reads)
+        and, under ``admission="estimate"``, ``AdmissionRejected`` when
+        the planner predicts the deadline is infeasible.
         """
         if deadline_s is not None and deadline_s <= 0:
             raise ValueError(f"deadline_s must be > 0, got {deadline_s}")
@@ -238,6 +281,22 @@ class QueryScheduler:
         if eps is not None:
             ov["epsilon"] = eps
         self._check_overrides(ov)
+        if self.admission == "estimate" and deadline_s is not None:
+            pred = self._predict_service_s(q, ov)
+            # even an instantly-formed wave waits out the batching window
+            if pred is not None and self.max_wait_s + pred > deadline_s:
+                self.index.stats.add("admission_rejects", 1)
+                with self._stats_lock:
+                    self.admission_rejects += 1
+                get_tracer().instant(
+                    "serve.admission_reject", predicted_s=pred,
+                    deadline_s=float(deadline_s))
+                raise AdmissionRejected(
+                    f"predicted service {pred * 1e3:.2f}ms (+ up to "
+                    f"{self.max_wait_s * 1e3:.2f}ms wave wait) exceeds "
+                    f"the {deadline_s * 1e3:.2f}ms deadline; rejected "
+                    f"before any read", predicted_s=pred,
+                    deadline_s=float(deadline_s))
         fut = QueryFuture()
         now = time.perf_counter()
         req = _Request(q=q[0], k=k,
@@ -264,6 +323,23 @@ class QueryScheduler:
         with self._stats_lock:
             self.submitted += 1
         return fut
+
+    def _predict_service_s(self, q: np.ndarray, ov: dict) -> float | None:
+        """Planner-predicted wave service time for one request: probe the
+        candidate buckets (metadata only, no reads), then cost the wave
+        plan (reads for cold probes + verify over estimated pair counts).
+        Returns None when no prediction is possible (admission must fail
+        open — a broken estimator should never turn into dropped traffic)."""
+        try:
+            cfg = self.index._resolve(ov)
+            Q = np.atleast_2d(np.asarray(q))
+            per_q = self.index.plan_probes(Q, **ov)
+            wplan = self.index._planner_for(cfg).plan_wave(
+                Q, per_q, self.index.meta, cfg, self.index.bucket_capacity,
+                warm=set(self.index.warm_buckets()))
+            return float(wplan.predicted_s)
+        except Exception:
+            return None
 
     def query(self, q: np.ndarray, *, epsilon: float | None = None,
               k: int | None = None, deadline_s: float | None = None,
@@ -353,6 +429,24 @@ class QueryScheduler:
                    wave_id: int = 0) -> None:
         tracer = get_tracer()
         Q = np.stack([r.q for r in members])
+
+        # mid-wave cancellation: execute_probes consults cancel(qi) before
+        # fanning each bucket out (and skips reads no live prober needs).
+        # Expiry is sticky — once a member misses its deadline it stays
+        # cancelled for the rest of the wave, and its future raises below.
+        deadlines = [r.deadline_t for r in members]
+        expired: set[int] = set()
+        cancel = None
+        if any(d is not None for d in deadlines):
+            def cancel(qi: int) -> bool:
+                if qi in expired:
+                    return True
+                dl = deadlines[qi]
+                if dl is not None and time.perf_counter() > dl:
+                    expired.add(qi)
+                    return True
+                return False
+
         try:
             plan = self.index.plan_probes(Q, **ov)
             if self.share_probes:
@@ -362,13 +456,16 @@ class QueryScheduler:
                     self.index.stats.add("shared_probe_reads", distinct)
                     self.index.stats.add("reads_saved_by_sharing",
                                          refs - distinct)
-                results = self.index.execute_probes(Q, plan, **ov)
+                results = self.index.execute_probes(Q, plan, cancel=cancel,
+                                                    **ov)
             else:
                 # A/B baseline: per-request execution, no sharing
                 results = []
                 for i in range(len(members)):
+                    sub_cancel = (None if cancel is None
+                                  else lambda qi, i=i: cancel(i))
                     results.extend(self.index.execute_probes(
-                        Q[i:i + 1], [plan[i]], **ov))
+                        Q[i:i + 1], [plan[i]], cancel=sub_cancel, **ov))
         except BaseException as e:
             now = time.perf_counter()
             for r in members:
@@ -379,13 +476,31 @@ class QueryScheduler:
             return
         now = time.perf_counter()
         lats = []
-        for r, (ids, dists) in zip(members, results):
+        midwave = 0
+        for qi, (r, (ids, dists)) in enumerate(zip(members, results)):
             r.future.latency_s = now - r.enqueue_t
+            if qi in expired:
+                # cancelled mid-wave: its partial result set is discarded
+                # (a deadline miss must not masquerade as a complete,
+                # possibly-truncated answer)
+                r.future.set_exception(DeadlineExceeded(
+                    f"deadline passed mid-wave "
+                    f"({now - r.deadline_t:.4f}s over); remaining probe "
+                    f"work was cancelled"))
+                tracer.async_end("serve.request", r.rid, wave=wave_id,
+                                 dropped=True, midwave=True)
+                midwave += 1
+                continue
             lats.append(r.future.latency_s)
             r.future.set_result(order_result(ids, dists, r.k))
             tracer.async_end("serve.request", r.rid, wave=wave_id)
+        if midwave:
+            self.index.stats.add("deadline_drops", midwave)
+            self.index.stats.add("deadline_drops_midwave", midwave)
         with self._stats_lock:
-            self.completed += len(members)
+            self.completed += len(members) - midwave
+            self.deadline_drops += midwave
+            self.deadline_drops_midwave += midwave
             self._latencies.extend(lats)
 
     # -- telemetry / lifecycle ------------------------------------------------
@@ -400,7 +515,9 @@ class QueryScheduler:
                 "submitted": self.submitted,
                 "completed": self.completed,
                 "rejected": self.rejected,
+                "admission_rejects": self.admission_rejects,
                 "deadline_drops": self.deadline_drops,
+                "deadline_drops_midwave": self.deadline_drops_midwave,
                 "waves": self.waves,
             }
         d["latency_p50_ms"] = (float(np.percentile(lats, 50)) * 1e3
@@ -421,7 +538,9 @@ class QueryScheduler:
                 "submitted": self.submitted,
                 "completed": self.completed,
                 "rejected": self.rejected,
+                "admission_rejects": self.admission_rejects,
                 "deadline_drops": self.deadline_drops,
+                "deadline_drops_midwave": self.deadline_drops_midwave,
                 "waves": self.waves,
             }
         d["pending"] = self.pending

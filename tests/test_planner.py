@@ -1,0 +1,500 @@
+"""Cost-based adaptive planner (repro.plan): estimator calibration,
+plan-driven capacities/batching/routing (byte-identical results planner
+on/off, zero compaction overflows), host/device routing flip under link
+emulation, pool-budget split, estimate-based admission, mid-wave deadline
+cancellation, query-path f32 threshold parity, and manifest back-compat
+for indexes built before sketches existed."""
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import DiskJoinIndex, JoinConfig
+from repro.plan import (CardinalityEstimator, CostModel, Planner,
+                        SKETCH_FILE)
+from repro.store.vector_store import FlatVectorStore
+
+
+def _flat(x, tmp_path, name="x.bin"):
+    return FlatVectorStore.from_array(str(tmp_path / name),
+                                      np.asarray(x, np.float32))
+
+
+def _truth_edges(x, assignment, edges, eps):
+    """Brute-force result-pair count per bucket edge (intra: unordered)."""
+    out = np.zeros(len(edges), np.int64)
+    members = {b: np.flatnonzero(assignment == b)
+               for b in np.unique(assignment)}
+    for i, (u, v) in enumerate(edges):
+        mu, mv = members.get(u, []), members.get(v, [])
+        if len(mu) == 0 or len(mv) == 0:
+            continue
+        d = np.linalg.norm(x[mu][:, None, :] - x[mv][None, :, :], axis=2)
+        hit = d <= eps
+        if u == v:
+            out[i] = int(np.triu(hit, k=1).sum())
+        else:
+            out[i] = int(hit.sum())
+    return out
+
+
+def _assign_nearest(x, centers):
+    d = np.linalg.norm(x[:, None, :] - centers[None, :, :], axis=2)
+    return np.argmin(d, axis=1).astype(np.int64)
+
+
+def _all_edges(num_buckets):
+    edges = [(u, u) for u in range(num_buckets)]
+    edges += [(u, v) for u in range(num_buckets)
+              for v in range(u + 1, num_buckets)]
+    return np.asarray(edges, np.int64)
+
+
+# ---------------------------------------------------------------------------
+# estimator: exactness when fully sampled, calibrated bounds otherwise
+# ---------------------------------------------------------------------------
+class TestEstimator:
+    def test_fully_sampled_buckets_estimate_exactly(self, tmp_path):
+        """Buckets at or below sample_rows are the sample: the 'estimate'
+        is a full verify of the sketch and must equal the ground truth."""
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(80, 8)).astype(np.float32)
+        assignment = np.repeat(np.arange(8), 10)   # every bucket: 10 rows
+        est = CardinalityEstimator.sample_flat(_flat(x, tmp_path),
+                                               assignment, 8, seed=3)
+        eps = 1.8
+        edges = _all_edges(8)
+        truth = _truth_edges(x, assignment, edges, eps)
+        got, lo, hi = est.est_edges(edges, eps)
+        assert np.allclose(got, truth)
+        assert (lo <= truth).all() and (truth <= hi).all()
+        assert truth.sum() > 0      # the check above wasn't vacuous
+
+    @pytest.mark.parametrize("dist", ["uniform", "clustered", "skewed"])
+    @pytest.mark.parametrize("avg_neighbors", [2, 10, 30])
+    def test_bounds_calibrated_across_distributions(self, tmp_path, dist,
+                                                    avg_neighbors):
+        from repro.data import clustered_vectors, epsilon_for_avg_neighbors
+
+        rng = np.random.default_rng(11)
+        n, d = 1200, 16
+        if dist == "uniform":
+            x = rng.uniform(-1, 1, size=(n, d)).astype(np.float32)
+        elif dist == "clustered":
+            x = clustered_vectors(n, d, seed=7)
+        else:  # skewed: one dominant tight cluster + a diffuse tail
+            dense = rng.normal(scale=0.05, size=(n * 3 // 4, d))
+            tail = rng.normal(scale=1.0, size=(n - dense.shape[0], d)) + 2.0
+            x = np.concatenate([dense, tail]).astype(np.float32)
+        eps = epsilon_for_avg_neighbors(x, avg_neighbors)
+        centers = x[rng.choice(n, size=10, replace=False)]
+        assignment = _assign_nearest(x, centers)
+        est = CardinalityEstimator.sample_flat(
+            _flat(x, tmp_path, f"{dist}{avg_neighbors}.bin"),
+            assignment, 10, seed=5)
+        edges = _all_edges(10)
+        truth = _truth_edges(x, assignment, edges, eps)
+        got, lo, hi = est.est_edges(edges, eps)
+        # z=2 Wilson upper bounds: ≳97% one-sided coverage per edge
+        covered = float((truth <= hi + 1e-9).mean())
+        assert covered >= 0.9, f"hi-bound coverage {covered:.2f}"
+        # the aggregate estimate tracks the true join size
+        if truth.sum() >= 200:
+            ratio = got.sum() / truth.sum()
+            assert 1 / 3 <= ratio <= 3, f"est/truth ratio {ratio:.2f}"
+
+    def test_sketch_roundtrip_and_version_guard(self, tmp_path):
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=(120, 6)).astype(np.float32)
+        assignment = np.repeat(np.arange(6), 20)
+        est = CardinalityEstimator.sample_flat(_flat(x, tmp_path),
+                                               assignment, 6, seed=9)
+        p = str(tmp_path / "sk.npz")
+        est.save(p)
+        back = CardinalityEstimator.load(p)
+        assert np.array_equal(back.samples, est.samples)
+        assert np.array_equal(back.rows, est.rows)
+        assert np.array_equal(back.sizes, est.sizes)
+        e1 = est.est_pairs((0, 1), 1.5)
+        e2 = back.est_pairs((0, 1), 1.5)
+        assert e1 == e2
+        with np.load(p) as f:
+            bad = {k: f[k] for k in f.files}
+        bad["version"] = np.int64(99)
+        np.savez(p, **bad)
+        with pytest.raises(ValueError, match="version"):
+            CardinalityEstimator.load(p)
+
+
+# ---------------------------------------------------------------------------
+# planner: plan-driven joins — parity, overflow elimination, routing flip
+# ---------------------------------------------------------------------------
+def _force_tiny_default_pair_cap(monkeypatch, cap=64):
+    """Make the device engine's *default* compaction capacity tiny, as a
+    hand-mistuned baseline. Planner-passed caps (pair_cap != None) are
+    untouched — exactly the knob the JoinPlan replaces."""
+    from repro.compute import engine as eng
+    orig = eng.DeviceVerifyEngine.__init__
+
+    def patched(self, cache, **kw):
+        if kw.get("pair_cap") is None:
+            kw["pair_cap"] = cap
+        orig(self, cache, **kw)
+
+    monkeypatch.setattr(eng.DeviceVerifyEngine, "__init__", patched)
+
+
+class TestJoinPlanning:
+    @pytest.mark.parametrize("io_mode,devices", [
+        ("sync", 1), ("prefetch", 1), ("prefetch", 4)])
+    def test_plan_on_off_byte_parity_and_zero_overflow(
+            self, small_dataset, tmp_path, monkeypatch, io_mode, devices):
+        """The planner only sizes and places work: planner-on results are
+        byte-identical to planner-off, and the planned pair_cap absorbs
+        the dense units a mistuned default overflows on."""
+        _force_tiny_default_pair_cap(monkeypatch)
+        x, eps = small_dataset
+        base = dict(epsilon=eps, pad_align=64, num_buckets=24,
+                    memory_budget_bytes=1 << 20, io_mode=io_mode,
+                    io_devices=devices, compute_mode="device",
+                    io_batch_reads=devices > 1, io_coalesce=devices > 1)
+        wd = str(tmp_path / f"off_{io_mode}{devices}")
+        with DiskJoinIndex.build(_flat(x, tmp_path, "a.bin"),
+                                 JoinConfig(**base), wd) as idx:
+            r_off = idx.self_join()
+            off_snap = idx.pipeline_snapshot()
+        wd = str(tmp_path / f"on_{io_mode}{devices}")
+        with DiskJoinIndex.build(_flat(x, tmp_path, "b.bin"),
+                                 JoinConfig(**base), wd) as idx:
+            r_on = idx.self_join(plan_mode="on")
+            on_snap = idx.pipeline_snapshot()
+        assert r_off.pairs.shape[0] > 0
+        assert np.array_equal(r_off.pairs, r_on.pairs)
+        assert np.array_equal(r_off.distances, r_on.distances)
+        # the mistuned baseline overflowed; the planned cap never does
+        assert off_snap["device_compact_overflows"] > 0
+        assert on_snap["device_compact_overflows"] == 0
+        plan = r_on.plan
+        assert plan is not None and plan.pair_cap > 64
+        assert on_snap["planned_pair_cap"] == plan.pair_cap
+        assert on_snap["plans"] == 1
+
+    @pytest.mark.parametrize("mode", ["host", "device"])
+    def test_cross_join_plan_parity(self, tmp_path, mode):
+        rng = np.random.default_rng(21)
+        a = rng.normal(size=(500, 8)).astype(np.float32)
+        b = (a[:400] + rng.normal(scale=0.2, size=(400, 8))
+             ).astype(np.float32)
+        kw = dict(epsilon=0.9, num_buckets=8, pad_align=64,
+                  memory_budget_bytes=1 << 20, compute_mode=mode)
+        with DiskJoinIndex.build(_flat(a, tmp_path, "a.bin"),
+                                 JoinConfig(**kw),
+                                 str(tmp_path / "ia")) as ia, \
+             DiskJoinIndex.build(_flat(b, tmp_path, "b.bin"),
+                                 JoinConfig(**kw),
+                                 str(tmp_path / "ib")) as ib:
+            r_off = ia.cross_join(ib)
+            r_on = ia.cross_join(ib, plan_mode="on")
+        assert r_off.pairs.shape[0] > 0
+        assert np.array_equal(r_off.pairs, r_on.pairs)
+        assert np.array_equal(r_off.distances, r_on.distances)
+        assert r_on.plan is not None and not r_on.plan.mixed
+
+    def test_plan_shape_and_explain(self, tmp_path):
+        rng = np.random.default_rng(2)
+        x = rng.normal(size=(900, 8)).astype(np.float32)
+        cfg = JoinConfig(epsilon=1.0, num_buckets=12, pad_align=64,
+                         memory_budget_bytes=1 << 20, verify_batch=16)
+        with DiskJoinIndex.build(_flat(x, tmp_path), cfg,
+                                 str(tmp_path / "idx")) as idx:
+            r = idx.self_join(plan_mode="on")
+        plan = r.plan
+        assert plan.num_units == len(plan.unit_params)
+        assert plan.num_units > 0
+        for route, batch in plan.unit_params:
+            assert route in ("host", "device")
+            assert 1 <= batch <= cfg.verify_batch
+        # pair_cap: pow2, floored, bounded by cap²
+        assert plan.pair_cap & (plan.pair_cap - 1) == 0
+        assert plan.pair_cap >= 64
+        text = plan.explain()
+        for needle in ("pair_cap", "verify_batch", "compute", "JoinPlan"):
+            assert needle in text
+
+    def test_route_flips_with_link_emulation(self, tmp_path):
+        """compute_mode="auto": free link → host (device compaction is
+        pure overhead); slow emulated link → device (the host path's full
+        mask+d² readback dominates). Same pair set either way."""
+        rng = np.random.default_rng(4)
+        x = rng.normal(size=(600, 8)).astype(np.float32)
+        cfg = JoinConfig(epsilon=1.1, num_buckets=10, pad_align=64,
+                         memory_budget_bytes=1 << 20)
+        with DiskJoinIndex.build(_flat(x, tmp_path), cfg,
+                                 str(tmp_path / "idx")) as idx:
+            r_ref = idx.self_join()
+            r_free = idx.self_join(plan_mode="on", compute_mode="auto")
+            r_slow = idx.self_join(plan_mode="on", compute_mode="auto",
+                                   emulate_xfer_gb_s=0.01)
+        assert r_free.plan.compute_mode == "host"
+        assert r_slow.plan.compute_mode in ("device", "mixed")
+        assert any(rt == "device" for rt, _ in r_slow.plan.unit_params)
+        for r in (r_free, r_slow):
+            assert np.array_equal(r_ref.pairs, r.pairs)
+            assert np.array_equal(r_ref.distances, r.distances)
+
+    def test_cost_model_provenance(self):
+        cfg = JoinConfig(epsilon=0.5, emulate_read_latency_s=0.004,
+                         emulate_xfer_gb_s=2.0)
+        m = CostModel.from_telemetry(cfg, None)
+        assert m.read_s_per_bucket == pytest.approx(0.004)
+        assert m.h2d_gb_s == 2.0
+        assert "config" in m.provenance["read_s_per_bucket"]
+        measured = CostModel.from_telemetry(
+            None, {"loads": 10, "read_s": 0.05})
+        assert measured.read_s_per_bucket == pytest.approx(0.005)
+        assert "measured" in measured.provenance["read_s_per_bucket"]
+        assert CostModel.from_telemetry(None, None).h2d_gb_s == 0.0
+
+
+# ---------------------------------------------------------------------------
+# pool-budget split
+# ---------------------------------------------------------------------------
+class TestPoolPlanning:
+    def _planner(self):
+        est = CardinalityEstimator(np.zeros((4, 2, 3), np.float32),
+                                   np.array([2, 2, 2, 2]),
+                                   np.array([5, 5, 5, 5]))
+        return Planner(est, CostModel())
+
+    def test_warm_quota_from_observed_reuse(self):
+        p = self._planner()
+        cfg = JoinConfig(epsilon=0.5)
+        pp = p.plan_pool(cfg, cap_buckets=6, lookahead=4,
+                         stats={"waves": 10, "shared_probe_reads": 38})
+        assert pp.warm_quota == 4            # ceil(3.8), within [2, 6]
+        assert pp.num_slabs == 6 + 4 + 4
+        assert "reuse" in pp.explain()
+
+    def test_warm_quota_floor_without_traffic(self):
+        p = self._planner()
+        cfg = JoinConfig(epsilon=0.5)
+        pp = p.plan_pool(cfg, cap_buckets=6, lookahead=4, stats={})
+        assert pp.warm_quota == 2            # legacy reserve
+        pp = p.plan_pool(cfg, cap_buckets=6, lookahead=4,
+                         stats={"waves": 3, "shared_probe_reads": 300})
+        assert pp.warm_quota == 6            # clamped to cap_buckets
+
+    def test_session_pool_uses_plan(self, tmp_path):
+        rng = np.random.default_rng(6)
+        x = rng.normal(size=(500, 8)).astype(np.float32)
+        cfg = JoinConfig(epsilon=1.0, num_buckets=8, pad_align=64,
+                         memory_budget_bytes=1 << 20, plan_mode="on")
+        with DiskJoinIndex.build(_flat(x, tmp_path), cfg,
+                                 str(tmp_path / "idx")) as idx:
+            out = idx.query_batch(x[:3] + 0.01)
+            assert len(out) == 3
+            assert idx._warm_quota is not None
+            assert idx._warm_quota >= 2
+
+
+# ---------------------------------------------------------------------------
+# serving: estimate-based admission + mid-wave deadline cancellation
+# ---------------------------------------------------------------------------
+class TestServingPlans:
+    def _index(self, tmp_path, **cfg_kw):
+        rng = np.random.default_rng(8)
+        x = rng.normal(size=(800, 8)).astype(np.float32)
+        base = dict(epsilon=1.0, num_buckets=16, pad_align=64,
+                    memory_budget_bytes=1 << 20)
+        base.update(cfg_kw)
+        return x, DiskJoinIndex.build(_flat(x, tmp_path),
+                                      JoinConfig(**base),
+                                      str(tmp_path / "idx"))
+
+    def test_estimate_admission_rejects_doomed_only(self, tmp_path):
+        from repro.serve import AdmissionRejected, QueryScheduler
+
+        x, idx = self._index(tmp_path)
+        with idx, QueryScheduler(idx, admission="estimate", max_wait_s=0.0,
+                                 emulate_read_latency_s=0.05) as s:
+            with pytest.raises(AdmissionRejected) as ei:
+                s.submit(x[0], deadline_s=0.001)
+            assert ei.value.predicted_s > ei.value.deadline_s
+            # rejected at the door: nothing was read for it
+            assert idx.stats.snapshot()["admission_rejects"] == 1
+            assert s.admission_rejects == 1
+            # a feasible deadline and a no-deadline request both admit
+            ids, _ = s.submit(x[1], deadline_s=30.0).result(timeout=30)
+            assert len(ids) >= 1
+            s.submit(x[2]).result(timeout=30)
+            snap = s.snapshot()
+            assert snap["admission_rejects"] == 1
+            assert snap["completed"] == 2
+
+    def test_queue_admission_never_estimate_rejects(self, tmp_path):
+        from repro.serve import QueryScheduler
+
+        x, idx = self._index(tmp_path)
+        with idx, QueryScheduler(idx, max_wait_s=0.0,
+                                 emulate_read_latency_s=0.05) as s:
+            fut = s.submit(x[0], deadline_s=0.001)
+            with pytest.raises(Exception):   # dropped later, not at submit
+                fut.result(timeout=30)
+            assert idx.stats.snapshot()["admission_rejects"] == 0
+
+    def test_admission_validation(self, tmp_path):
+        from repro.serve import QueryScheduler
+
+        _, idx = self._index(tmp_path)
+        with idx:
+            with pytest.raises(ValueError, match="admission"):
+                QueryScheduler(idx, admission="psychic")
+
+    def test_pre_read_vs_midwave_drops_distinguished(self, tmp_path):
+        from repro.serve import DeadlineExceeded, QueryScheduler
+
+        x, idx = self._index(tmp_path)
+        with idx:
+            # pre-read: the deadline expires while waiting for the wave
+            # window — dropped before any read, not counted as mid-wave
+            with QueryScheduler(idx, wave_size=64, max_wait_s=0.3) as s:
+                fut = s.submit(x[0], deadline_s=0.005)
+                with pytest.raises(DeadlineExceeded, match="before the"):
+                    fut.result(timeout=30)
+            snap = idx.stats.snapshot()
+            assert snap["deadline_drops"] == 1
+            assert snap["deadline_drops_midwave"] == 0
+
+            # mid-wave: reads are slow enough that the deadline passes
+            # while its wave is already executing
+            with QueryScheduler(idx, max_wait_s=0.0,
+                                emulate_read_latency_s=0.05) as s:
+                probes = idx.plan_probes(x[3][None, :])[0]
+                assert len(probes) >= 2      # enough buckets to cancel in
+                fut = s.submit(x[3], deadline_s=0.01)
+                with pytest.raises(DeadlineExceeded, match="mid-wave"):
+                    fut.result(timeout=30)
+            snap = idx.stats.snapshot()
+            assert snap["deadline_drops"] == 2
+            assert snap["deadline_drops_midwave"] == 1
+            # the cancelled request's remaining solo reads were skipped
+            assert snap["midwave_skipped_reads"] >= 1
+
+    def test_midwave_peer_unaffected(self, tmp_path):
+        from repro.serve import DeadlineExceeded, QueryScheduler
+
+        x, idx = self._index(tmp_path)
+        with idx:
+            baseline = idx.query_batch(x[5][None, :])[0]
+            with QueryScheduler(idx, max_wait_s=0.05,
+                                emulate_read_latency_s=0.03) as s:
+                doomed = s.submit(x[3], deadline_s=0.005)
+                peer = s.submit(x[5])
+                with pytest.raises(DeadlineExceeded):
+                    doomed.result(timeout=30)
+                ids, dists = peer.result(timeout=30)
+            order = np.argsort(ids)
+            bl_order = np.argsort(baseline[0])
+            assert np.array_equal(np.sort(ids), np.sort(baseline[0]))
+            np.testing.assert_array_equal(dists[order],
+                                          baseline[1][bl_order])
+
+
+# ---------------------------------------------------------------------------
+# query-path dtype parity (satellite): f32 threshold on both paths
+# ---------------------------------------------------------------------------
+class TestQueryDtypeParity:
+    def test_f32_threshold_parity_near_boundary(self, tmp_path):
+        """Regression for the host/device query divergence: the host path
+        used to apply the ε-threshold in float64 while the device kernel
+        applies it in float32. Construct a pair whose exactly-representable
+        d² lies between ε² (f64) and its f32 rounding: the f64 rule
+        excludes it, the f32 rule includes it — host and device must now
+        agree (both f32), and both return float32 distances."""
+        d2_exact = 0.25 ** 2 + 0.125 ** 2 + 0.0625 ** 2 + 0.03125 ** 2
+        assert np.float32(d2_exact) == d2_exact     # exactly representable
+        eps = math.sqrt(d2_exact - 1e-9)
+        # the crafted regime: f64 excludes, f32 (both paths) includes
+        assert d2_exact > eps * eps
+        assert np.float32(d2_exact) <= np.float32(eps * eps)
+
+        p = np.array([0.25, 0.125, 0.0625, 0.03125], np.float32)
+        inner = np.array([0.1, 0.0, 0.0, 0.0], np.float32)   # clearly in
+        rng = np.random.default_rng(3)
+        far = rng.normal(size=(120, 4)).astype(np.float32)
+        far = far / np.linalg.norm(far, axis=1, keepdims=True) * 10.0
+        x = np.concatenate([p[None], inner[None], far]).astype(np.float32)
+        cfg = JoinConfig(epsilon=eps, num_buckets=4, pad_align=64,
+                         memory_budget_bytes=1 << 20, prune=False)
+        with DiskJoinIndex.build(_flat(x, tmp_path), cfg,
+                                 str(tmp_path / "idx")) as idx:
+            q = np.zeros((1, 4), np.float32)
+            (h_ids, h_d), = idx.query_batch(q)
+            (d_ids, d_d), = idx.query_batch(q, compute_mode="device")
+        assert set(h_ids.tolist()) == set(d_ids.tolist())
+        assert 0 in h_ids and 1 in h_ids        # f32 semantics include p
+        assert h_d.dtype == np.float32 and d_d.dtype == np.float32
+        hp = float(h_d[list(h_ids).index(0)])
+        dp = float(d_d[list(d_ids).index(0)])
+        assert hp == dp == float(np.sqrt(np.float32(d2_exact)))
+
+
+# ---------------------------------------------------------------------------
+# manifest back-compat: pre-sketch indexes open and lazily rebuild
+# ---------------------------------------------------------------------------
+class TestManifestBackCompat:
+    def test_pre_sketch_manifest_rebuilds_once(self, tmp_path):
+        from repro.core.index import MANIFEST_NAME
+
+        rng = np.random.default_rng(12)
+        x = rng.normal(size=(500, 8)).astype(np.float32)
+        wd = str(tmp_path / "idx")
+        cfg = JoinConfig(epsilon=1.0, num_buckets=8, pad_align=64,
+                         memory_budget_bytes=1 << 20)
+        with DiskJoinIndex.build(_flat(x, tmp_path), cfg, wd) as idx:
+            r_new = idx.self_join(plan_mode="on")
+        # simulate an index written before sketches existed
+        os.remove(os.path.join(wd, SKETCH_FILE))
+        mpath = os.path.join(wd, MANIFEST_NAME)
+        with open(mpath) as f:
+            m = json.load(f)
+        m.pop("sketch", None)
+        with open(mpath, "w") as f:
+            json.dump(m, f)
+
+        with DiskJoinIndex.open(wd) as idx:
+            with pytest.warns(UserWarning, match="predates planner"):
+                r_old = idx.self_join(plan_mode="on")
+            assert np.array_equal(r_new.pairs, r_old.pairs)
+            assert np.array_equal(r_new.distances, r_old.distances)
+        # the rebuilt sketch was re-persisted and noted in the manifest
+        assert os.path.exists(os.path.join(wd, SKETCH_FILE))
+        with open(mpath) as f:
+            assert json.load(f)["sketch"]["file"] == SKETCH_FILE
+
+        # second open: sketch on disk, no warning, no rebuild
+        with DiskJoinIndex.open(wd) as idx:
+            import warnings as _w
+            with _w.catch_warnings():
+                _w.simplefilter("error")
+                r2 = idx.self_join(plan_mode="on")
+            assert np.array_equal(r_new.pairs, r2.pairs)
+
+    def test_plan_off_never_touches_sketch(self, tmp_path):
+        """plan_mode="off" (the default) must work with no sketch at all —
+        the planner is strictly opt-in."""
+        rng = np.random.default_rng(13)
+        x = rng.normal(size=(400, 8)).astype(np.float32)
+        wd = str(tmp_path / "idx")
+        cfg = JoinConfig(epsilon=1.0, num_buckets=8, pad_align=64,
+                         memory_budget_bytes=1 << 20)
+        with DiskJoinIndex.build(_flat(x, tmp_path), cfg, wd):
+            pass
+        os.remove(os.path.join(wd, SKETCH_FILE))
+        with DiskJoinIndex.open(wd) as idx:
+            r = idx.self_join()
+            assert r.plan is None
+            assert r.pairs.shape[0] >= 0
+        assert not os.path.exists(os.path.join(wd, SKETCH_FILE))
