@@ -26,7 +26,8 @@ from benchmarks import (common, fig7_baselines, fig8_recall, fig9_memory,
                         fig17_ablation, fig18_pruning, fig19_pipeline,
                         fig20_striping, fig21_online, fig22_scheduler,
                         fig23_device_pipeline, fig24_planner,
-                        kernel_roofline, obs_trace, randomness)
+                        fig25_resilience, kernel_roofline, obs_trace,
+                        randomness)
 
 MODULES = [
     ("fig7_baselines", fig7_baselines),
@@ -46,6 +47,7 @@ MODULES = [
     ("fig22_scheduler", fig22_scheduler),
     ("fig23_device_pipeline", fig23_device_pipeline),
     ("fig24_planner", fig24_planner),
+    ("fig25_resilience", fig25_resilience),
     ("obs_trace", obs_trace),
     ("randomness", randomness),
     ("kernel_roofline", kernel_roofline),

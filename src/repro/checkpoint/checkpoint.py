@@ -9,7 +9,8 @@ Layout per step:
 Properties:
   * **atomic**: a checkpoint is visible only after the directory rename; a
     crash mid-write leaves a ``.tmp`` that restore ignores and cleanup
-    reaps.
+    reaps. (The commit protocol lives in ``repro.ft.atomic`` and is
+    shared with the join checkpointer.)
   * **async**: ``CheckpointManager(async_save=True)`` snapshots to host
     memory on the training thread, writes on a daemon thread — the step
     loop never blocks on disk.
@@ -23,13 +24,13 @@ from __future__ import annotations
 
 import json
 import os
-import queue
 import re
 import shutil
-import threading
 
 import jax
 import numpy as np
+
+from repro.ft.atomic import AsyncCommitter, atomic_commit_dir, reap_tmp
 
 
 def _flatten(tree):
@@ -40,34 +41,27 @@ def _flatten(tree):
 def save_checkpoint(directory: str, step: int, tree, *,
                     extra: dict | None = None) -> str:
     """Blocking save. Returns the committed path."""
-    os.makedirs(directory, exist_ok=True)
-    name = f"step_{step:09d}"
-    tmp = os.path.join(directory, name + ".tmp")
-    final = os.path.join(directory, name)
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
-    os.makedirs(tmp)
     leaves, treedef = _flatten(tree)
-    dtypes = []
-    for i, leaf in enumerate(leaves):
-        arr = np.asarray(jax.device_get(leaf))
-        dtypes.append(str(arr.dtype))
-        if arr.dtype == np.dtype("bfloat16"):
-            arr = arr.view(np.uint16)  # npy-safe container
-        np.save(os.path.join(tmp, f"arr_{i:05d}.npy"), arr)
-    manifest = {
-        "step": step,
-        "num_leaves": len(leaves),
-        "treedef": str(treedef),
-        "dtypes": dtypes,
-        "extra": extra or {},
-    }
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.replace(tmp, final)
-    return final
+
+    def _write(tmp: str) -> None:
+        dtypes = []
+        for i, leaf in enumerate(leaves):
+            arr = np.asarray(jax.device_get(leaf))
+            dtypes.append(str(arr.dtype))
+            if arr.dtype == np.dtype("bfloat16"):
+                arr = arr.view(np.uint16)  # npy-safe container
+            np.save(os.path.join(tmp, f"arr_{i:05d}.npy"), arr)
+        manifest = {
+            "step": step,
+            "num_leaves": len(leaves),
+            "treedef": str(treedef),
+            "dtypes": dtypes,
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+
+    return atomic_commit_dir(directory, f"step_{step:09d}", _write)
 
 
 def list_checkpoints(directory: str) -> list[tuple[int, str]]:
@@ -116,53 +110,36 @@ def cleanup(directory: str, keep: int = 3) -> None:
     ckpts = list_checkpoints(directory)
     for _, path in ckpts[:-keep]:
         shutil.rmtree(path, ignore_errors=True)
-    for d in os.listdir(directory) if os.path.isdir(directory) else []:
-        if d.endswith(".tmp"):
-            shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+    reap_tmp(directory)
 
 
 class CheckpointManager:
     """Double-buffered async writer with bounded queue (depth 1: a slow
-    disk can delay at most one snapshot, never corrupt one)."""
+    disk can delay at most one snapshot, never corrupt one). The worker
+    thread and error-surfacing live in ``repro.ft.atomic.AsyncCommitter``."""
 
     def __init__(self, directory: str, keep: int = 3,
                  async_save: bool = True):
         self.directory = directory
         self.keep = keep
         self.async_save = async_save
-        self._q: queue.Queue = queue.Queue(maxsize=1)
-        self._worker = None
-        self._errors: list[Exception] = []
-        if async_save:
-            self._worker = threading.Thread(target=self._drain, daemon=True)
-            self._worker.start()
+        self._committer = (AsyncCommitter(name="train-ckpt")
+                           if async_save else None)
 
-    def _drain(self):
-        while True:
-            item = self._q.get()
-            if item is None:
-                return
-            step, host_tree, extra = item
-            try:
-                save_checkpoint(self.directory, step, host_tree, extra=extra)
-                cleanup(self.directory, self.keep)
-            except Exception as e:  # surfaced on next save()/close()
-                self._errors.append(e)
+    def _write(self, step: int, host_tree, extra: dict | None) -> None:
+        save_checkpoint(self.directory, step, host_tree, extra=extra)
+        cleanup(self.directory, self.keep)
 
     def save(self, step: int, tree, extra: dict | None = None) -> None:
-        if self._errors:
-            raise RuntimeError(f"async checkpoint failed: {self._errors[0]}")
         host_tree = jax.tree_util.tree_map(
             lambda x: np.asarray(jax.device_get(x)), tree)
-        if self.async_save:
-            self._q.put((step, host_tree, extra))  # blocks if one in flight
+        if self._committer is not None:
+            # blocks if one write is in flight (depth-1 backpressure)
+            self._committer.submit(
+                lambda: self._write(step, host_tree, extra))
         else:
-            save_checkpoint(self.directory, step, host_tree, extra=extra)
-            cleanup(self.directory, self.keep)
+            self._write(step, host_tree, extra)
 
     def close(self) -> None:
-        if self._worker is not None:
-            self._q.put(None)
-            self._worker.join(timeout=60)
-        if self._errors:
-            raise RuntimeError(f"async checkpoint failed: {self._errors[0]}")
+        if self._committer is not None:
+            self._committer.close()

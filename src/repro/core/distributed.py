@@ -37,14 +37,16 @@ from repro.obs import get_tracer
 def verify_edges(slab: jax.Array, edges: jax.Array, eps2: float):
     """slab: (W, cap, d) window bucket slab; edges: (E, 2) int32 into slab.
 
-    Returns (counts (E,), mask (E, cap, cap) bool). Under pjit with edges
-    sharded over ``data``, the slab gathers become collectives.
+    Returns (counts (E,), mask (E, cap, cap) bool, d2 (E, cap, cap)) —
+    the squared distances ride along so the host can emit pair distances
+    without recomputing them. Under pjit with edges sharded over
+    ``data``, the slab gathers become collectives.
     """
     u = jnp.take(slab, edges[:, 0], axis=0)      # (E, cap, d)
     v = jnp.take(slab, edges[:, 1], axis=0)
     d2 = jax.vmap(ref.pairwise_l2)(u, v)         # (E, cap, cap)
     mask = d2 <= eps2
-    return jnp.sum(mask, axis=(1, 2)), mask
+    return jnp.sum(mask, axis=(1, 2)), mask, d2
 
 
 @partial(jax.jit, static_argnames=("eps2", "k_cap"))
@@ -157,7 +159,11 @@ class DistributedJoin:
                              self.cap * self.cap)
 
     def _read_padded(self, b: int) -> tuple[np.ndarray, np.ndarray, int]:
-        vecs, ids = self.store.read_bucket(b)
+        from repro.io.retry import read_with_retry
+        vecs, ids = read_with_retry(
+            lambda: self.store.read_bucket(b),
+            retries=self.config.io_retries,
+            backoff_s=self.config.io_retry_backoff_s)
         n = vecs.shape[0]
         pad = self.cap - n
         if pad > 0:
@@ -233,8 +239,9 @@ class DistributedJoin:
         return out, na, nb, intra, edges_dev
 
     def _extract_compact(self, handle, slab, edges, entries, eps2):
-        """Fetch a superstep's compacted pairs; on per-edge capacity
-        overflow re-dispatch at the next pow2 (sticky for later steps)."""
+        """Fetch a superstep's compacted pairs (+ distances); on per-edge
+        capacity overflow re-dispatch at the next pow2 (sticky for later
+        steps)."""
         out, na, nb, intra, edges_dev = handle
         E = edges.shape[0]
         counts = np.asarray(out[0])
@@ -247,20 +254,64 @@ class DistributedJoin:
             counts = np.asarray(out[0])
         rows_c = np.asarray(out[1])
         cols_c = np.asarray(out[2])
-        res = []
+        dist_c = np.asarray(out[3])
+        res, res_d = [], []
         for ei, (a, b) in enumerate(edges):
             k = int(counts[ei])
             if k:
                 ida, idb = entries[a][1], entries[b][1]
                 res.append(np.stack([ida[rows_c[ei, :k]],
                                      idb[cols_c[ei, :k]]], axis=1))
-        return res
+                res_d.append(dist_c[ei, :k].astype(np.float32))
+        return res, res_d
 
-    def run(self, graph: BucketGraph):
+    def fingerprint(self) -> str:
+        """Session digest guarding checkpoint compatibility: config +
+        bucket layout + store extent. A checkpoint written under a
+        different digest must not be resumed into this run."""
+        from repro.ft.atomic import fingerprint as _fp
+        return _fp({"config": dataclasses.asdict(self.config),
+                    "sizes": self.meta.sizes.tolist(),
+                    "num_buckets": int(self.meta.num_buckets),
+                    "dim": int(self.store.dim)})
+
+    def run(self, graph: BucketGraph, *, checkpointer=None,
+            resume_from=None, fault=None):
+        """Execute the planned join → (pairs, info).
+
+        ``checkpointer``: a ``repro.ft.JoinCheckpointer`` recording
+        superstep progress (the raw emission stream) without ever
+        blocking the verify pipeline. ``resume_from``: a checkpoint
+        directory path or a ``ResumeState`` — committed supersteps are
+        replayed from the spill files and execution restarts at the
+        cursor; the final pairs+distances are byte-identical to an
+        uninterrupted run. ``fault``: a ``repro.ft.FaultInjector``
+        consulted at each superstep boundary (tests/benchmarks only).
+        """
         eps2 = float(self.config.epsilon) ** 2
         steps = plan_supersteps(graph, self.config, self.cache_buckets,
                                 meta=self.meta)
         pairs_out, dists_out = [], []
+        start_si = 0
+        restore_s = 0.0
+        fp = (self.fingerprint()
+              if checkpointer is not None or resume_from is not None
+              else None)
+        if resume_from is not None:
+            from repro.ft import JoinCheckpointer
+            rs = resume_from
+            if isinstance(rs, str):
+                rs = JoinCheckpointer.restore(rs, fingerprint=fp)
+            if rs is not None:
+                # the committed raw stream, in emission order — replayed
+                # verbatim so the final dedup sees the same concatenation
+                # an uninterrupted run would
+                pairs_out.extend(rs.pairs)
+                dists_out.extend(rs.dists)
+                start_si = rs.superstep + 1
+                restore_s = rs.restore_s
+        if checkpointer is not None:
+            checkpointer.begin(fp, start_si)
         sharding = None
         if self.mesh is not None:
             sharding = jax.sharding.NamedSharding(
@@ -269,9 +320,17 @@ class DistributedJoin:
         dc = 0
         tracer = get_tracer()
         for si, step in enumerate(steps):
+            if si < start_si:
+                continue  # committed by the restored checkpoint chain
+            if fault is not None:
+                fault.superstep(si)
             edges = step.edges_local
             if edges.shape[0] == 0:
-                continue  # defensive: planner always pairs buckets w/ edges
+                # defensive: planner always pairs buckets w/ edges — but
+                # the checkpoint cursor must advance through empty steps
+                if checkpointer is not None:
+                    checkpointer.step_done(si, [], [])
+                continue
             step_span = tracer.span("dist.superstep", step=si,
                                     buckets=len(step.bucket_ids),
                                     edges=int(edges.shape[0]))
@@ -318,10 +377,12 @@ class DistributedJoin:
                 else entries[a][2] * (entries[a][2] - 1) // 2
                 for a, b in edges)
             if self._dev_pool is not None:
-                pairs_out.extend(
-                    self._extract_compact(out, slab, edges, entries, eps2))
+                step_pairs, step_dists = self._extract_compact(
+                    out, slab, edges, entries, eps2)
             else:
                 mask = np.asarray(out[1])[:E]
+                d2 = np.asarray(out[2])[:E]
+                step_pairs, step_dists = [], []
                 for ei, (a, b) in enumerate(edges):
                     na, nb = entries[a][2], entries[b][2]
                     m = mask[ei][:na, :nb]
@@ -330,8 +391,15 @@ class DistributedJoin:
                     rows, cols = np.nonzero(m)
                     if rows.size:
                         ida, idb = entries[a][1], entries[b][1]
-                        pairs_out.append(
+                        step_pairs.append(
                             np.stack([ida[rows], idb[cols]], axis=1))
+                        step_dists.append(
+                            np.sqrt(d2[ei][:na, :nb][rows, cols]
+                                    ).astype(np.float32))
+            pairs_out.extend(step_pairs)
+            dists_out.extend(step_dists)
+            if checkpointer is not None:
+                checkpointer.step_done(si, step_pairs, step_dists)
             # keep-set is the *upcoming* window: evicting on the finished
             # window's set discards exactly the slabs superstep w+1 reuses
             # (e.g. buckets loaded in w-1 that skip w and return in w+1),
@@ -344,13 +412,25 @@ class DistributedJoin:
             self._evict_to(keep)
             step_span.__exit__(None, None, None)
 
+        if checkpointer is not None:
+            checkpointer.finish()
+
+        watermark = sum(len(p) for p in pairs_out)
         if pairs_out:
-            pairs, _ = dedup_pairs(np.concatenate(pairs_out))
+            pairs, dists = dedup_pairs(np.concatenate(pairs_out),
+                                       np.concatenate(dists_out))
         else:
             pairs = np.zeros((0, 2), np.int64)
+            dists = np.zeros(0, np.float32)
         info = {"supersteps": len(steps), "host_loads": self.loads,
                 "host_hits": self.hits, "prefetched_buckets": self.prefetched,
-                "distance_computations": dc}
+                "distance_computations": dc, "dists": dists,
+                "watermark_rows": watermark}
+        if resume_from is not None:
+            info["resumed_at"] = start_si
+            info["restore_s"] = restore_s
+        if checkpointer is not None:
+            info["ckpt"] = dict(checkpointer.stats)
         if self._dev_pool is not None:
             info["h2d_transfers"] = self._dev_pool.transfers
             info["device_slab_hits"] = self._dev_pool.hits

@@ -53,9 +53,14 @@ class BucketCache:
     references keep evicted slabs alive for pending verify batches).
     """
 
-    def __init__(self, store: BucketedVectorStore, capacity_rows: int):
+    def __init__(self, store: BucketedVectorStore, capacity_rows: int,
+                 retries: int = 0, retry_backoff_s: float = 0.005,
+                 stats=None):
         self.store = store
         self.capacity_rows = capacity_rows
+        self.retries = max(0, int(retries))
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.stats = stats
         self._slabs: dict[int, tuple[np.ndarray, np.ndarray, int]] = {}
         self.loads = 0
 
@@ -65,7 +70,10 @@ class BucketCache:
     load_issued = True  # sync loads never need a pipeline to catch up
 
     def load(self, b: int) -> None:
-        vecs, ids = self.store.read_bucket(b)
+        from repro.io.retry import read_with_retry
+        vecs, ids = read_with_retry(
+            lambda: self.store.read_bucket(b), retries=self.retries,
+            backoff_s=self.retry_backoff_s, stats=self.stats)
         n = vecs.shape[0]
         pad = self.capacity_rows - n
         if pad > 0:
@@ -167,7 +175,10 @@ class JoinExecutor:
                 # stats surface even without the prefetch pipeline
                 from repro.io import PipelineStats
                 stats = PipelineStats()
-            return BucketCache(self.store, self.bucket_capacity), stats
+            return BucketCache(self.store, self.bucket_capacity,
+                               retries=self.config.io_retries,
+                               retry_backoff_s=self.config.io_retry_backoff_s,
+                               stats=stats), stats
         from repro.io import PipelineStats, PrefetchedBucketCache
         cap_buckets = min(self.cache_buckets, self.meta.num_buckets or 1)
         pool_slabs = self.config.io_pool_slabs
@@ -187,7 +198,8 @@ class JoinExecutor:
             num_threads=self.config.io_threads, pad_value=PAD_COORD,
             batch_reads=self.config.io_batch_reads,
             coalesce=self.config.io_coalesce, stats=stats, pool=pool,
-            tracer=self.tracer)
+            tracer=self.tracer, retries=self.config.io_retries,
+            retry_backoff_s=self.config.io_retry_backoff_s)
         return cache, stats
 
     def _resolve_planner(self, pstats):

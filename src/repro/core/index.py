@@ -59,7 +59,9 @@ from repro.core.types import (BUILD_TIME_FIELDS, QUERY_TIME_FIELDS,
                               JoinResult, QueryConfig, finalize_timings,
                               merge_config, resolve_bucket_capacity,
                               resolve_cache_buckets, split_config)
+from repro.ft.atomic import atomic_write_json
 from repro.io import BufferPool, PipelineStats
+from repro.io.retry import read_with_retry
 from repro.obs import MetricsRegistry, get_tracer
 from repro.plan import (SKETCH_FILE, CardinalityEstimator, CostModel,
                         Planner)
@@ -68,6 +70,8 @@ from repro.store.vector_store import BucketedVectorStore, FlatVectorStore
 
 MANIFEST_NAME = "diskjoin_index.json"
 MANIFEST_FORMAT = "diskjoin-index/v1"
+# serving fast-restart snapshot: which buckets were warm at close()
+RESIDENCY_NAME = "residency.json"
 # pool slabs the query warm cache always leaves free (liveness headroom
 # for concurrent batch joins and for the queries' own transient reads)
 _WARM_RESERVE = 2
@@ -124,7 +128,8 @@ class DiskJoinIndex:
     def build(cls, store: FlatVectorStore,
               config: JoinConfig | BuildConfig,
               workdir: str | None = None, *,
-              layout: str = "auto") -> "DiskJoinIndex":
+              layout: str = "auto",
+              resumable: bool = True) -> "DiskJoinIndex":
         """Bucketize + lay out ``store`` once under ``workdir`` and return
         the attached session. ``config`` may be a flat ``JoinConfig`` (its
         query-time half becomes the session's per-call defaults) or a bare
@@ -136,6 +141,14 @@ class DiskJoinIndex:
         ``"spatial"`` uses the ε-free nearest-neighbor center tour (the
         right choice when the index mostly serves cross-joins or wide
         ε-sweeps). Without coalescing/striping no reordering is needed.
+
+        ``resumable`` (default on) commits per-phase markers under
+        ``<workdir>/build_phases`` (``repro.ft.PhaseLog``): a build killed
+        mid-way restarts at the last finished phase — sample, assign,
+        sketch and layout outputs are loaded instead of rescanning the
+        flat store (only the final write scan re-runs). A config change
+        invalidates the markers (fingerprinted); the log is removed once
+        the manifest commits.
         """
         if isinstance(config, BuildConfig):
             build_cfg, query_defaults = config, None
@@ -147,6 +160,14 @@ class DiskJoinIndex:
         workdir = workdir or tempfile.mkdtemp(prefix="diskjoin_index_")
         os.makedirs(workdir, exist_ok=True)
 
+        flog = None
+        if resumable:
+            from repro.ft.phases import PhaseLog, build_fingerprint
+            flog = PhaseLog(
+                os.path.join(workdir, "build_phases"),
+                build_fingerprint(dataclasses.asdict(build_cfg),
+                                  (store.num_vectors, store.dim), layout))
+
         # disk-layout planning (only when coalescing/striping can use it):
         # the write scan needs the extent order *before* it lays them out
         plan_cache: dict = {}
@@ -157,6 +178,12 @@ class DiskJoinIndex:
                 flat = merge_config(build_cfg, query_defaults)
 
                 def layout_fn(meta):
+                    if flog is not None and flog.has("layout"):
+                        order = flog.load_arrays("layout")["order"]
+                        plan_cache.update(
+                            order=order,
+                            kind=flog.load_meta("layout").get("kind"))
+                        return order
                     graph = build_bucket_graph(meta, flat)
                     cap = resolve_bucket_capacity(flat, meta.sizes)
                     cache_buckets = resolve_cache_buckets(flat, cap,
@@ -164,12 +191,25 @@ class DiskJoinIndex:
                     order = ordering.compute_node_order(graph, meta, flat,
                                                         cache_buckets)
                     plan_cache.update(graph=graph, order=order,
-                                      cache_buckets=cache_buckets)
+                                      cache_buckets=cache_buckets,
+                                      kind="schedule")
+                    if flog is not None:
+                        flog.commit_arrays("layout",
+                                           extra={"kind": "schedule"},
+                                           order=order)
                     return order
             else:
                 def layout_fn(meta):
+                    if flog is not None and flog.has("layout"):
+                        order = flog.load_arrays("layout")["order"]
+                        plan_cache.update(order=order, kind="spatial")
+                        return order
                     order = ordering.spatial_order(meta.centers)
-                    plan_cache.update(order=order)
+                    plan_cache.update(order=order, kind="spatial")
+                    if flog is not None:
+                        flog.commit_arrays("layout",
+                                           extra={"kind": "spatial"},
+                                           order=order)
                     return order
 
         # planner cardinality sketch: sampled from the FLAT store during
@@ -178,13 +218,22 @@ class DiskJoinIndex:
         sketch_box: dict = {}
 
         def sketch_sink(assignment, num_buckets):
-            sketch_box["est"] = CardinalityEstimator.sample_flat(
+            if flog is not None and flog.has("sketch"):
+                sketch_box["est"] = CardinalityEstimator.load(
+                    os.path.join(flog.path("sketch"), "sketch.npz"))
+                return
+            est = CardinalityEstimator.sample_flat(
                 store, assignment, num_buckets, seed=build_cfg.seed)
+            sketch_box["est"] = est
+            if flog is not None:
+                flog.commit("sketch", lambda tmp: est.save(
+                    os.path.join(tmp, "sketch.npz")))
 
         t0 = time.perf_counter()
         bstore, meta, bt = bucketize(store, os.path.join(workdir, "buckets"),
                                      config, layout_order_fn=layout_fn,
-                                     sketch_sink=sketch_sink)
+                                     sketch_sink=sketch_sink,
+                                     phase_log=flog)
         build_seconds = time.perf_counter() - t0
 
         index = cls(workdir, bstore, meta, build_cfg, query_defaults,
@@ -193,33 +242,40 @@ class DiskJoinIndex:
         if est is not None:
             est.save(index._sketch_path)
             index._estimator = est
-        layout_kind = None
+        layout_kind = plan_cache.get("kind")
         if "graph" in plan_cache and query_defaults is not None:
             # the layout pass already planned the default-config join;
             # seed the session caches so the first self_join reuses it
-            layout_kind = "schedule"
+            # (a resumed layout phase loads only the order — the caches
+            # then repopulate lazily)
             flat = merge_config(build_cfg, query_defaults)
             gkey = index._graph_key(flat)
             index._graph_cache[gkey] = plan_cache["graph"]
             index._order_cache[(gkey, flat.order_strategy, flat.reorder,
                                 plan_cache["cache_buckets"])] = \
                 plan_cache["order"]
-        elif "order" in plan_cache:
-            layout_kind = "spatial"
         index._write_manifest(plan_cache.get("order"), layout_kind)
+        if flog is not None:
+            flog.clear()  # manifest committed: the build is done
         return index
 
     @classmethod
     def open(cls, workdir: str,
-             config: JoinConfig | QueryConfig | None = None
-             ) -> "DiskJoinIndex":
+             config: JoinConfig | QueryConfig | None = None, *,
+             warm_start: bool = False) -> "DiskJoinIndex":
         """Reattach to an index built earlier in ``workdir`` — no dataset
         rescan; the bucketed store and manifest are read as-is.
 
         ``config`` optionally replaces the session's query-time defaults.
         Passing a flat ``JoinConfig`` validates its build-time half against
         the manifest (mismatch raises — the on-disk layout cannot be
-        changed by opening it differently)."""
+        changed by opening it differently).
+
+        ``warm_start=True`` replays the residency snapshot the previous
+        session persisted on ``close()``: the buckets that were warm then
+        are pre-faulted into pool slabs now (bounded by the warm quota),
+        so the first post-restart query wave hits instead of paying cold
+        reads. A missing/stale snapshot degrades to a cold open."""
         path = os.path.join(workdir, MANIFEST_NAME)
         with open(path) as f:
             m = json.load(f)
@@ -268,6 +324,8 @@ class DiskJoinIndex:
             index._order_cache[(gkey, flat.order_strategy, flat.reorder,
                                 cache_buckets)] = \
                 np.asarray(m["layout_order"], dtype=np.int64)
+        if warm_start:
+            index._warm_start()
         return index
 
     def _write_manifest(self, layout_order, layout_kind) -> None:
@@ -291,8 +349,10 @@ class DiskJoinIndex:
             "sketch": (self._sketch_manifest_entry()
                        if self._estimator is not None else None),
         }
-        with open(os.path.join(self.workdir, MANIFEST_NAME), "w") as f:
-            json.dump(manifest, f)
+        # atomic: a build killed mid-manifest-write must not leave a
+        # torn JSON that a later open() would half-parse
+        atomic_write_json(os.path.join(self.workdir, MANIFEST_NAME),
+                          manifest)
 
     def _sketch_manifest_entry(self) -> dict:
         return {"file": SKETCH_FILE,
@@ -897,10 +957,10 @@ class DiskJoinIndex:
             self._read_misses_prefetch(misses, cfg, pool, verify,
                                        skip=skip)
         else:
-            self._read_misses_sync(misses, pool, verify, skip=skip)
+            self._read_misses_sync(misses, cfg, pool, verify, skip=skip)
 
-    def _read_misses_sync(self, misses: list[int], pool: BufferPool,
-                          verify, skip=None) -> None:
+    def _read_misses_sync(self, misses: list[int], cfg: JoinConfig,
+                          pool: BufferPool, verify, skip=None) -> None:
         for b in misses:
             if skip is not None and skip(b):
                 # every prober's deadline passed since the wave started:
@@ -915,14 +975,20 @@ class DiskJoinIndex:
                 size = int(self.meta.sizes[b])
                 vecs = np.empty((size, self.dim), np.float32)
                 ids = np.empty(size, np.int64)
-                n = self.store.read_bucket_into(b, vecs, ids,
-                                                pad_value=PAD_COORD)
+                n = read_with_retry(
+                    lambda: self.store.read_bucket_into(
+                        b, vecs, ids, pad_value=PAD_COORD),
+                    retries=cfg.io_retries,
+                    backoff_s=cfg.io_retry_backoff_s, stats=self.stats)
                 self.stats.add("query_fallback_reads", 1)
                 verify(b, vecs, ids, n)
                 continue
-            n = self.store.read_bucket_into(b, pool.vecs(slot),
-                                            pool.ids(slot),
-                                            pad_value=PAD_COORD)
+            n = read_with_retry(
+                lambda: self.store.read_bucket_into(
+                    b, pool.vecs(slot), pool.ids(slot),
+                    pad_value=PAD_COORD),
+                retries=cfg.io_retries,
+                backoff_s=cfg.io_retry_backoff_s, stats=self.stats)
             self.stats.add("query_reads", 1)
             try:
                 verify(b, pool.vecs(slot), pool.ids(slot), n)
@@ -942,7 +1008,8 @@ class DiskJoinIndex:
             num_threads=cfg.io_threads, stats=self.stats,
             pad_value=PAD_COORD, batch_reads=cfg.io_batch_reads,
             coalesce=cfg.io_coalesce, close_pool=False,
-            tracer=self._tracer())
+            tracer=self._tracer(), retries=cfg.io_retries,
+            retry_backoff_s=cfg.io_retry_backoff_s)
         try:
             for _ in misses:
                 b, slot, n = pf.pop_next()
@@ -993,6 +1060,74 @@ class DiskJoinIndex:
         with self._warm_lock:
             return list(self._warm)
 
+    # -- serving fast restart (repro.ft) --------------------------------------
+    def save_residency_snapshot(self) -> int:
+        """Persist the warm cache's bucket ids (LRU order, oldest first)
+        to ``residency.json`` so the next ``open(warm_start=True)`` can
+        pre-fault them. Slabs a concurrent query still has pinned are
+        excluded — their residency is transient, not cache state. Returns
+        the number of bucket ids written (0 on a read-only workdir)."""
+        with self._warm_lock:
+            pool = self._pool
+            if pool is None:
+                ids = []
+            else:
+                # warm entries hold exactly one pool reference; a higher
+                # refcount means some in-flight verify has it pinned
+                ids = [int(b) for b, (slot, _) in self._warm.items()
+                       if pool.refcount(slot) == 1]
+        try:
+            atomic_write_json(os.path.join(self.workdir, RESIDENCY_NAME),
+                              {"format": "diskjoin-residency/v1",
+                               "buckets": ids})
+        except OSError:
+            return 0  # read-only workdir: restart just comes up cold
+        return len(ids)
+
+    def _warm_start(self) -> None:
+        """Replay a persisted residency snapshot: pre-fault its buckets
+        into pool slabs (newest-first priority, bounded by the warm
+        quota and pool headroom). Counted as ``warm_prefaults``."""
+        path = os.path.join(self.workdir, RESIDENCY_NAME)
+        if self.query_defaults is None or not os.path.exists(path):
+            return
+        try:
+            with open(path) as f:
+                snap = json.load(f)
+            buckets = snap["buckets"]
+        except (OSError, ValueError, KeyError):
+            return  # torn/stale snapshot: cold start, not an error
+        cfg = merge_config(self.build_config, self.query_defaults)
+        pool = self._ensure_pool(cfg)
+        with self._warm_lock:
+            cap = (self._warm_quota if self._warm_quota is not None
+                   else pool.num_slabs - _WARM_RESERVE)
+            # snapshot is LRU order (oldest first): fault the most
+            # recently used end first so it survives any truncation
+            faulted = 0
+            for b in reversed(buckets):
+                b = int(b)
+                if faulted >= cap:
+                    break
+                if not (0 <= b < self.meta.num_buckets):
+                    continue  # snapshot predates a rebuild
+                if b in self._warm:
+                    continue
+                slot = pool.try_acquire()
+                if slot is None:
+                    break
+                n = read_with_retry(
+                    lambda: self.store.read_bucket_into(
+                        b, pool.vecs(slot), pool.ids(slot),
+                        pad_value=PAD_COORD),
+                    retries=cfg.io_retries,
+                    backoff_s=cfg.io_retry_backoff_s, stats=self.stats)
+                self._warm[b] = (slot, n)
+                self._warm.move_to_end(b, last=False)
+                faulted += 1
+            if faulted:
+                self.stats.add("warm_prefaults", faulted)
+
     # -- telemetry / lifecycle ------------------------------------------------
     def pipeline_snapshot(self) -> dict:
         """The session's single PipelineStats snapshot: batch-join loads
@@ -1033,6 +1168,9 @@ class DiskJoinIndex:
         self._closed = True
         with self._warm_lock:
             if self._pool is not None:
+                # snapshot BEFORE dropping: the warm set is the restart's
+                # pre-fault list (ft "serving fast restart")
+                self.save_residency_snapshot()
                 self._drop_warm_locked()
         if self._pool is not None:
             self._pool.close()

@@ -94,6 +94,13 @@ class JoinConfig:
       emulate_read_latency_s: per-bucket-read sleep applied to the
         bucketed store — restores the paper's SSD-latency-bound regime on
         page-cached memmaps (benchmarks only; 0 disables).
+      io_retries: transient read errors (OSError/IOError) tolerated per
+        bucket read before the join aborts — each failed attempt is
+        retried after a capped exponential backoff. 0 restores the old
+        fail-fast behavior. Counted in ``PipelineStats.io_retries`` /
+        ``io_read_errors``.
+      io_retry_backoff_s: base backoff before the first retry; doubles
+        per attempt, capped at 50× the base.
       compute_mode: "host" stages each verify batch from host slabs and
         extracts pairs from a fetched boolean mask; "device" mirrors the
         cache schedule on the accelerator (``repro.compute``): every
@@ -143,6 +150,8 @@ class JoinConfig:
     io_batch_reads: bool = False
     io_coalesce: bool = False
     emulate_read_latency_s: float = 0.0
+    io_retries: int = 2
+    io_retry_backoff_s: float = 0.005
     compute_mode: str = "host"
     verify_batch: int = 32
     emulate_xfer_gb_s: float = 0.0
@@ -157,6 +166,8 @@ class JoinConfig:
         if self.io_stripe_by not in ("phase", "hash"):
             raise ValueError(f"io_stripe_by must be 'phase' or 'hash', "
                              f"got {self.io_stripe_by!r}")
+        if self.io_retries < 0:
+            raise ValueError(f"io_retries must be >= 0, got {self.io_retries}")
         _validate_compute(self.compute_mode, self.verify_batch,
                           self.plan_mode)
 
@@ -232,6 +243,8 @@ class QueryConfig:
     io_threads: int = 2
     io_batch_reads: bool = False
     emulate_read_latency_s: float = 0.0
+    io_retries: int = 2
+    io_retry_backoff_s: float = 0.005
     compute_mode: str = "host"
     verify_batch: int = 32
     emulate_xfer_gb_s: float = 0.0
@@ -241,6 +254,8 @@ class QueryConfig:
         if self.io_mode not in ("sync", "prefetch"):
             raise ValueError(f"io_mode must be 'sync' or 'prefetch', "
                              f"got {self.io_mode!r}")
+        if self.io_retries < 0:
+            raise ValueError(f"io_retries must be >= 0, got {self.io_retries}")
         _validate_compute(self.compute_mode, self.verify_batch,
                           self.plan_mode)
 

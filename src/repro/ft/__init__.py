@@ -1,0 +1,18 @@
+"""Fault tolerance: crash-safe joins, resumable builds, warm restarts.
+
+See ``ft/README.md`` for the checkpoint format, the crash matrix, and
+the goodput definition used by ``benchmarks/fig25_resilience.py``.
+"""
+from repro.ft.atomic import (AsyncCommitter, atomic_commit_dir,
+                             atomic_write_json, fingerprint, reap_tmp)
+from repro.ft.fault import FaultInjector, FlakyStore, InjectedKill
+from repro.ft.join_ckpt import JoinCheckpointer, ResumeState
+from repro.ft.phases import PhaseLog
+
+__all__ = [
+    "AsyncCommitter", "atomic_commit_dir", "atomic_write_json",
+    "fingerprint", "reap_tmp",
+    "FaultInjector", "FlakyStore", "InjectedKill",
+    "JoinCheckpointer", "ResumeState",
+    "PhaseLog",
+]

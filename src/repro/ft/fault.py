@@ -1,0 +1,110 @@
+"""Fault injection for resilience tests and ``fig25_resilience``.
+
+Three failure families map to the crash matrix in ``ft/README.md``:
+
+  * ``FaultInjector(kill_at_superstep=k)`` — process death mid-join: the
+    injector raises ``InjectedKill`` at the top of superstep ``k`` and
+    then disarms, so the resumed run sails past the same point.
+  * ``FlakyStore(store, read_error_every=n)`` — transient SSD read
+    errors: every n-th read call raises ``IOError`` (capped by
+    ``max_errors``), exercising the retry/backoff path in the executors
+    and prefetcher.
+  * ``FaultInjector.tear_checkpoint(dir)`` — a torn ``.tmp`` checkpoint
+    directory as a crashed writer would leave it; restore must ignore it
+    and open must reap it.
+"""
+from __future__ import annotations
+
+import os
+import threading
+
+import numpy as np
+
+
+class InjectedKill(RuntimeError):
+    """Raised by the injector in place of a real SIGKILL — the test
+    harness catches it where a supervisor would restart the process."""
+
+
+class FaultInjector:
+    """Deterministic fault schedule for one join attempt."""
+
+    def __init__(self, kill_at_superstep: int | None = None):
+        self.kill_at_superstep = kill_at_superstep
+        self._fired = False
+        self.kills = 0
+
+    def superstep(self, si: int) -> None:
+        """Hook called by ``DistributedJoin.run`` at the top of each
+        superstep. Fires at most once, then disarms."""
+        if (self.kill_at_superstep is not None and not self._fired
+                and si >= self.kill_at_superstep):
+            self._fired = True
+            self.kills += 1
+            raise InjectedKill(f"injected kill at superstep {si}")
+
+    @staticmethod
+    def tear_checkpoint(directory: str, superstep: int = 999999) -> str:
+        """Fabricate a torn (uncommitted) checkpoint write: a ``.tmp``
+        dir with a partial payload and no committed rename."""
+        path = os.path.join(directory, f"ckpt_{superstep:06d}.tmp")
+        os.makedirs(path, exist_ok=True)
+        np.save(os.path.join(path, "pairs.npy"),
+                np.zeros((3, 2), np.int64))   # garbage a resume must ignore
+        with open(os.path.join(path, "state.json"), "w") as f:
+            f.write('{"superstep": ')  # truncated mid-write
+        return path
+
+
+class FlakyStore:
+    """Proxy store injecting transient ``IOError`` on every n-th read.
+
+    Wraps any vector store; non-read attribute access (including
+    ``read_latency_s`` assignment, which ``DiskJoinIndex`` sets) passes
+    through to the inner store. The error counter is shared across
+    ``read_bucket`` / ``read_bucket_into`` / ``read_run_into`` and
+    thread-safe (the prefetcher reads from worker threads).
+    """
+
+    _LOCAL = ("store", "read_error_every", "max_errors", "_lock",
+              "_calls", "errors_injected")
+
+    def __init__(self, store, *, read_error_every: int = 5,
+                 max_errors: int | None = None):
+        object.__setattr__(self, "store", store)
+        object.__setattr__(self, "read_error_every", int(read_error_every))
+        object.__setattr__(self, "max_errors", max_errors)
+        object.__setattr__(self, "_lock", threading.Lock())
+        object.__setattr__(self, "_calls", 0)
+        object.__setattr__(self, "errors_injected", 0)
+
+    def _maybe_fail(self) -> None:
+        with self._lock:
+            self._calls += 1
+            calls, injected = self._calls, self.errors_injected
+            if (calls % self.read_error_every == 0
+                    and (self.max_errors is None
+                         or injected < self.max_errors)):
+                object.__setattr__(self, "errors_injected", injected + 1)
+                raise IOError("injected transient read error")
+
+    def read_bucket(self, *a, **kw):
+        self._maybe_fail()
+        return self.store.read_bucket(*a, **kw)
+
+    def read_bucket_into(self, *a, **kw):
+        self._maybe_fail()
+        return self.store.read_bucket_into(*a, **kw)
+
+    def read_run_into(self, *a, **kw):
+        self._maybe_fail()
+        return self.store.read_run_into(*a, **kw)
+
+    def __getattr__(self, name):
+        return getattr(self.store, name)
+
+    def __setattr__(self, name, value):
+        if name in self._LOCAL:
+            object.__setattr__(self, name, value)
+        else:
+            setattr(self.store, name, value)

@@ -39,6 +39,13 @@ class PipelineStats:
     batched_reads: int = 0        # reads that rode in a batched submission
     coalesced_reads: int = 0      # merged sequential reads performed
     coalesced_buckets: int = 0    # buckets served by coalesced reads
+    # transient-fault handling (repro.io.retry): a flaky SSD read is
+    # retried with capped exponential backoff instead of aborting the join
+    io_read_errors: int = 0       # read attempts that raised OSError
+    io_retries: int = 0           # re-issued reads (≤ errors; last may fail)
+    # serving fast restart (repro.ft): buckets pre-faulted into the warm
+    # cache from a residency snapshot by DiskJoinIndex.open(warm_start=True)
+    warm_prefaults: int = 0
     # online point-query serving (DiskJoinIndex.query — shares this stats
     # object with the batch joins of the same index session)
     queries: int = 0              # point queries answered

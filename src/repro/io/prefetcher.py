@@ -42,6 +42,7 @@ import numpy as np
 
 from repro.io.buffer_pool import BufferPool
 from repro.io.pipeline import PipelineStats
+from repro.io.retry import read_with_retry
 from repro.obs import get_tracer
 
 MAX_BATCH = 8  # reads per batched submission (io_uring SQ burst analogue)
@@ -56,13 +57,19 @@ class SchedulePrefetcher:
                  pad_value: float = 0.0,
                  batch_reads: bool = False, coalesce: bool = False,
                  max_batch: int = MAX_BATCH, close_pool: bool = True,
-                 tracer=None):
+                 tracer=None, retries: int = 0,
+                 retry_backoff_s: float = 0.005):
         """``close_pool=False`` marks ``pool`` as shared (owned by a
         ``DiskJoinIndex`` session, outliving this prefetcher): ``close()``
         then only wakes/cancels this prefetcher's waiters instead of
-        closing the pool for every other consumer."""
+        closing the pool for every other consumer. ``retries`` tolerates
+        that many transient read errors per run (capped exponential
+        backoff, ``repro.io.retry``) before the error surfaces at
+        ``pop_next``."""
         self.store = store
         self.pool = pool
+        self.retries = max(0, int(retries))
+        self.retry_backoff_s = float(retry_backoff_s)
         self.close_pool = bool(close_pool)
         self.lookahead = max(1, int(lookahead))
         self.stats = stats if stats is not None else PipelineStats()
@@ -190,16 +197,22 @@ class SchedulePrefetcher:
         try:
             if len(run) == 1:
                 k, b, slot = run[0]
-                n = self.store.read_bucket_into(
-                    b, self.pool.vecs(slot), self.pool.ids(slot),
-                    pad_value=self.pad_value)
+                n = read_with_retry(
+                    lambda: self.store.read_bucket_into(
+                        b, self.pool.vecs(slot), self.pool.ids(slot),
+                        pad_value=self.pad_value),
+                    retries=self.retries,
+                    backoff_s=self.retry_backoff_s, stats=self.stats)
                 results = [(k, (slot, n))]
             else:
-                ns = self.store.read_run_into(
-                    [b for _, b, _ in run],
-                    [self.pool.vecs(s) for _, _, s in run],
-                    [self.pool.ids(s) for _, _, s in run],
-                    pad_value=self.pad_value)
+                ns = read_with_retry(
+                    lambda: self.store.read_run_into(
+                        [b for _, b, _ in run],
+                        [self.pool.vecs(s) for _, _, s in run],
+                        [self.pool.ids(s) for _, _, s in run],
+                        pad_value=self.pad_value),
+                    retries=self.retries,
+                    backoff_s=self.retry_backoff_s, stats=self.stats)
                 self.stats.add("coalesced_reads", 1)
                 self.stats.add("coalesced_buckets", len(run))
                 results = [(k, (s, n))
@@ -283,7 +296,8 @@ class PrefetchedBucketCache:
                  num_threads: int = 2, pad_value: float = 0.0,
                  batch_reads: bool = False, coalesce: bool = False,
                  stats: PipelineStats | None = None,
-                 pool: BufferPool | None = None, tracer=None):
+                 pool: BufferPool | None = None, tracer=None,
+                 retries: int = 0, retry_backoff_s: float = 0.005):
         """``pool``: an externally-owned (session) pool to read into —
         slab shape must match (``capacity_rows`` × ``store.dim``); it is
         left open by ``close()``. Without it a private pool of
@@ -308,7 +322,8 @@ class PrefetchedBucketCache:
             store, actions, self.pool, lookahead=lookahead,
             num_threads=num_threads, stats=self.stats, pad_value=pad_value,
             batch_reads=batch_reads, coalesce=coalesce,
-            close_pool=self._owns_pool, tracer=tracer)
+            close_pool=self._owns_pool, tracer=tracer,
+            retries=retries, retry_backoff_s=retry_backoff_s)
         self._slots: dict[int, tuple[int, int]] = {}  # bucket -> (slot, rows)
         self.loads = 0
 

@@ -48,7 +48,7 @@ def run(edges: int, cap: int, dim: int, window: int,
         with mesh:
             jitted = jax.jit(verify_edges,
                              in_shardings=(s_slab, s_edges),
-                             out_shardings=(s_edges, s_edges),
+                             out_shardings=(s_edges, s_edges, s_edges),
                              static_argnums=(2,))
             lowered = jitted.lower(slab, eidx, 1.0)
             compiled = lowered.compile()

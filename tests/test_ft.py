@@ -1,0 +1,393 @@
+"""Fault tolerance (repro.ft): atomic commit primitives, join
+checkpoint/restore byte-parity under kill injection (host and device
+verify), transient read-error retry, serving residency snapshots and
+resumable index builds."""
+import json
+import os
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (DiskJoinIndex, JoinConfig, bucketize,
+                        build_bucket_graph)
+from repro.core.distributed import DistributedJoin
+from repro.data import clustered_vectors
+from repro.ft import (AsyncCommitter, FaultInjector, FlakyStore,
+                      InjectedKill, JoinCheckpointer, PhaseLog,
+                      atomic_commit_dir, atomic_write_json, fingerprint,
+                      reap_tmp)
+from repro.store.vector_store import FlatVectorStore
+
+
+# ---------------------------------------------------------------------------
+# atomic commit primitives (shared by train ckpt, join ckpt, phase log)
+# ---------------------------------------------------------------------------
+class TestAtomic:
+    def test_commit_dir_is_atomic_and_tmp_free(self, tmp_path):
+        d = str(tmp_path)
+
+        def writer(tmp):
+            with open(os.path.join(tmp, "a.txt"), "w") as f:
+                f.write("hello")
+
+        out = atomic_commit_dir(d, "thing", writer)
+        assert os.path.basename(out) == "thing"
+        assert open(os.path.join(out, "a.txt")).read() == "hello"
+        assert not [n for n in os.listdir(d) if n.endswith(".tmp")]
+
+    def test_failed_writer_leaves_no_committed_dir(self, tmp_path):
+        d = str(tmp_path)
+
+        def writer(tmp):
+            raise RuntimeError("disk full")
+
+        with pytest.raises(RuntimeError, match="disk full"):
+            atomic_commit_dir(d, "thing", writer)
+        assert not os.path.exists(os.path.join(d, "thing"))
+
+    def test_reap_tmp_removes_torn_dirs_only(self, tmp_path):
+        d = str(tmp_path)
+        os.makedirs(os.path.join(d, "good"))
+        os.makedirs(os.path.join(d, "torn.tmp"))
+        with open(os.path.join(d, "torn.tmp", "x"), "w") as f:
+            f.write("partial")
+        reaped = reap_tmp(d)
+        assert len(reaped) == 1
+        assert not os.path.exists(os.path.join(d, "torn.tmp"))
+        assert os.path.exists(os.path.join(d, "good"))
+
+    def test_atomic_write_json_roundtrip(self, tmp_path):
+        p = str(tmp_path / "m.json")
+        atomic_write_json(p, {"k": [1, 2]})
+        assert json.load(open(p)) == {"k": [1, 2]}
+        atomic_write_json(p, {"k": 3})  # replace, not append
+        assert json.load(open(p)) == {"k": 3}
+
+    def test_fingerprint_stable_and_sensitive(self):
+        a = fingerprint({"eps": 0.3, "n": 16})
+        assert a == fingerprint({"n": 16, "eps": 0.3})  # key order
+        assert a != fingerprint({"eps": 0.31, "n": 16})
+
+    def test_async_committer_runs_and_surfaces_errors(self, tmp_path):
+        box = []
+        c = AsyncCommitter(name="t")
+        c.submit(lambda: box.append(1))
+        c.drain()
+        assert box == [1]
+        c.submit(lambda: (_ for _ in ()).throw(OSError("boom")))
+        with pytest.raises(RuntimeError, match="async checkpoint failed"):
+            c.drain()
+        c.submit(lambda: box.append(2))  # committer recovered
+        c.drain()
+        assert box == [1, 2]
+        c.close()
+
+    def test_try_submit_never_blocks(self):
+        gate = threading.Event()
+        c = AsyncCommitter(name="t")
+        c.submit(gate.wait)           # occupy the writer
+        assert c.try_submit(lambda: None) in (True, False)
+        # queue (maxsize 1) may already hold one; a second must be refused
+        c.try_submit(lambda: None)
+        assert c.try_submit(lambda: None) is False
+        gate.set()
+        c.close()
+
+
+# ---------------------------------------------------------------------------
+# join checkpoint/restore
+# ---------------------------------------------------------------------------
+def _dist_setup(tmp_path, **cfg_kw):
+    x = clustered_vectors(3000, 32, seed=4)
+    store = FlatVectorStore.from_array(str(tmp_path / "x.bin"), x)
+    # budget chosen so the planned join spans many supersteps (a kill
+    # mid-run must land between commits, not after the only step)
+    base = dict(epsilon=0.3, recall_target=0.95, pad_align=64,
+                memory_budget_bytes=128 << 10, num_buckets=24)
+    base.update(cfg_kw)
+    cfg = JoinConfig(**base)
+    bs, meta, _ = bucketize(store, str(tmp_path / "bk"), cfg)
+    graph = build_bucket_graph(meta, cfg)
+    return DistributedJoin(bs, meta, cfg), graph
+
+
+class TestJoinCheckpointer:
+    def test_checkpointed_run_matches_plain(self, tmp_path):
+        dj, graph = _dist_setup(tmp_path)
+        base_pairs, base_info = dj.run(graph)
+        ck = JoinCheckpointer(str(tmp_path / "ck"))
+        pairs, info = dj.run(graph, checkpointer=ck)
+        assert np.array_equal(pairs, base_pairs)
+        assert np.array_equal(info["dists"], base_info["dists"])
+        assert info["ckpt"]["saves"] > 0
+
+    @pytest.mark.parametrize("mode", ["host", "device"])
+    def test_kill_and_resume_byte_parity(self, tmp_path, mode):
+        dj, graph = _dist_setup(tmp_path, compute_mode=mode)
+        base_pairs, base_info = dj.run(graph)
+        assert base_info["supersteps"] > 3
+        kill_at = max(1, int(base_info["supersteps"] * 0.6))
+
+        ckdir = str(tmp_path / "ck")
+        ck = JoinCheckpointer(ckdir)
+        fi = FaultInjector(kill_at_superstep=kill_at)
+        with pytest.raises(InjectedKill):
+            dj.run(graph, checkpointer=ck, fault=fi)
+        assert fi.kills == 1
+        ck.finish()  # flush the async writer before reopening the dir
+
+        ck2 = JoinCheckpointer(ckdir)
+        pairs, info = dj.run(graph, checkpointer=ck2, resume_from=ckdir)
+        assert info["resumed_at"] > 0
+        assert info["restore_s"] >= 0.0
+        # byte-identical output: pairs AND distances AND raw-stream
+        # watermark (no row emitted twice across the kill boundary)
+        assert np.array_equal(pairs, base_pairs)
+        assert np.array_equal(info["dists"], base_info["dists"])
+        assert info["watermark_rows"] == base_info["watermark_rows"]
+
+    def test_resume_skips_committed_supersteps(self, tmp_path):
+        dj, graph = _dist_setup(tmp_path)
+        _, base_info = dj.run(graph)
+        kill_at = max(1, int(base_info["supersteps"] * 0.6))
+        ckdir = str(tmp_path / "ck")
+        ck = JoinCheckpointer(ckdir)
+        with pytest.raises(InjectedKill):
+            dj.run(graph, checkpointer=ck,
+                   fault=FaultInjector(kill_at_superstep=kill_at))
+        ck.finish()
+        _, info = dj.run(graph, resume_from=ckdir)
+        # at least the committed prefix is skipped, and the cursor can
+        # never pass the kill point (nothing beyond it was committed)
+        assert 0 < info["resumed_at"] <= kill_at
+
+    def test_restore_refuses_fingerprint_mismatch(self, tmp_path):
+        dj, graph = _dist_setup(tmp_path)
+        ckdir = str(tmp_path / "ck")
+        dj.run(graph, checkpointer=JoinCheckpointer(ckdir))
+        with pytest.raises(ValueError, match="fingerprint"):
+            JoinCheckpointer.restore(ckdir, fingerprint="deadbeef")
+        # and through the run() entrypoint with a different config
+        dj2 = DistributedJoin(dj.store, dj.meta,
+                              JoinConfig(epsilon=0.31, recall_target=0.95,
+                                         pad_align=64,
+                                         memory_budget_bytes=128 << 10,
+                                         num_buckets=24))
+        with pytest.raises(ValueError, match="refusing to resume"):
+            dj2.run(graph, resume_from=ckdir)
+
+    def test_torn_tmp_checkpoint_ignored_and_reaped(self, tmp_path):
+        dj, graph = _dist_setup(tmp_path)
+        ckdir = str(tmp_path / "ck")
+        base_pairs, _ = dj.run(graph, checkpointer=JoinCheckpointer(ckdir))
+        FaultInjector.tear_checkpoint(ckdir)
+        assert any(n.endswith(".tmp") for n in os.listdir(ckdir))
+        rs = JoinCheckpointer.restore(ckdir, fingerprint=dj.fingerprint())
+        assert rs is not None
+        assert not any(n.endswith(".tmp") for n in os.listdir(ckdir))
+        pairs, _ = dj.run(graph, resume_from=ckdir)
+        assert np.array_equal(pairs, base_pairs)
+
+    def test_restore_empty_dir_returns_none(self, tmp_path):
+        assert JoinCheckpointer.restore(str(tmp_path / "nope"),
+                                        fingerprint="x") is None
+
+
+# ---------------------------------------------------------------------------
+# transient read-error retry
+# ---------------------------------------------------------------------------
+def _build_index(tmp_path, name="idx", **cfg_kw):
+    x = clustered_vectors(2500, 24, seed=9)
+    flat = FlatVectorStore.from_array(str(tmp_path / f"{name}.bin"), x)
+    base = dict(epsilon=0.35, recall_target=0.9, pad_align=64,
+                num_buckets=20, memory_budget_bytes=1 << 20)
+    base.update(cfg_kw)
+    return x, DiskJoinIndex.build(flat, JoinConfig(**base),
+                                  str(tmp_path / name))
+
+
+class TestRetry:
+    @pytest.mark.parametrize("io_mode", ["sync", "prefetch"])
+    def test_transient_errors_retried_and_counted(self, tmp_path, io_mode):
+        x, idx = _build_index(tmp_path, name=f"r_{io_mode}",
+                              io_mode=io_mode,
+                              io_coalesce=(io_mode == "prefetch"))
+        q = x[:16]
+        expect = idx.query_batch(q, io_retries=2)
+        idx.drop_warm_cache()
+        idx.store = FlakyStore(idx.store, read_error_every=3)
+        got = idx.query_batch(q, io_retries=2, io_retry_backoff_s=1e-4)
+        snap = idx.pipeline_snapshot()
+        assert snap["io_read_errors"] > 0
+        assert snap["io_retries"] == snap["io_read_errors"]
+        assert "io_retries" in idx.metrics_snapshot()["pipeline"]
+        for (i1, d1), (i2, d2) in zip(expect, got):
+            o1, o2 = np.argsort(i1), np.argsort(i2)
+            assert np.array_equal(i1[o1], i2[o2])
+            assert np.allclose(d1[o1], d2[o2])
+        idx.close()
+
+    def test_permanent_failure_still_raises(self, tmp_path):
+        x, idx = _build_index(tmp_path, name="perm")
+        idx.drop_warm_cache()
+        idx.store = FlakyStore(idx.store, read_error_every=1)
+        with pytest.raises(OSError, match="injected"):
+            idx.query_batch(x[:4], io_retries=2, io_retry_backoff_s=1e-5)
+        assert idx.pipeline_snapshot()["io_read_errors"] >= 3
+        idx.close()
+
+    def test_join_read_path_retries(self, tmp_path):
+        x, idx = _build_index(tmp_path, name="jr")
+        expect = idx.self_join()
+        idx.store = FlakyStore(idx.store, read_error_every=4)
+        got = idx.self_join(io_retries=3, io_retry_backoff_s=1e-4)
+        assert np.array_equal(expect.pairs, got.pairs)
+        assert idx.pipeline_snapshot()["io_retries"] > 0
+        idx.close()
+
+
+# ---------------------------------------------------------------------------
+# serving residency snapshot / warm restart
+# ---------------------------------------------------------------------------
+class TestResidency:
+    def test_snapshot_roundtrip_and_warm_restart(self, tmp_path):
+        x, idx = _build_index(tmp_path, name="warm")
+        q = x[:12]
+        cold = idx.query_batch(q)
+        warm = set(idx.warm_buckets())
+        assert warm
+        idx.close()  # persists residency.json
+        snap_path = tmp_path / "warm" / "residency.json"
+        assert snap_path.exists()
+        assert set(json.load(open(snap_path))["buckets"]) == warm
+
+        idx2 = DiskJoinIndex.open(str(tmp_path / "warm"), warm_start=True)
+        assert idx2.pipeline_snapshot()["warm_prefaults"] > 0
+        assert set(idx2.warm_buckets()) <= warm
+        out = idx2.query_batch(q)  # first post-restart wave
+        assert idx2.pipeline_snapshot()["query_warm_hits"] > 0
+        for (i1, d1), (i2, d2) in zip(cold, out):
+            o1, o2 = np.argsort(i1), np.argsort(i2)
+            assert np.array_equal(i1[o1], i2[o2])
+            assert np.allclose(d1[o1], d2[o2])
+        idx2.close()
+
+    def test_cold_open_without_snapshot_is_noop(self, tmp_path):
+        x, idx = _build_index(tmp_path, name="cold")
+        p = os.path.join(idx.workdir, "residency.json")
+        if os.path.exists(p):
+            os.unlink(p)
+        idx.close()
+        if os.path.exists(p):
+            os.unlink(p)  # close() may have written an (empty) snapshot
+        idx2 = DiskJoinIndex.open(str(tmp_path / "cold"), warm_start=True)
+        assert idx2.pipeline_snapshot().get("warm_prefaults", 0) == 0
+        assert idx2.warm_buckets() == []
+        idx2.close()
+
+    def test_pinned_slots_excluded_from_snapshot(self, tmp_path):
+        x, idx = _build_index(tmp_path, name="pin")
+        idx.query_batch(x[:12])
+        warm = idx.warm_buckets()
+        assert len(warm) >= 2
+        pinned_b = warm[0]
+        slot, _ = idx._warm[pinned_b]
+        idx._pool.pin(slot)  # an in-flight verify holds this slab
+        try:
+            n = idx.save_residency_snapshot()
+            snap = json.load(open(os.path.join(idx.workdir,
+                                               "residency.json")))
+            assert pinned_b not in snap["buckets"]
+            assert n == len(warm) - 1
+        finally:
+            idx._pool.unpin(slot)
+        idx.close()
+
+    def test_snapshot_during_concurrent_join_is_safe(self, tmp_path):
+        x, idx = _build_index(tmp_path, name="conc")
+        idx.query_batch(x[:12])
+        idx._begin_join()  # join running: warm slabs were dropped
+        try:
+            assert idx.save_residency_snapshot() == 0
+        finally:
+            idx._end_join()
+        # warm set repopulates and the next snapshot sees it again
+        idx.query_batch(x[:12])
+        assert idx.save_residency_snapshot() > 0
+        idx.close()
+
+
+# ---------------------------------------------------------------------------
+# resumable builds (phase log)
+# ---------------------------------------------------------------------------
+def _kill_write_scan(monkeypatch, n_kills=1):
+    bz = sys.modules["repro.core.bucketize"]
+    orig = bz.write_buckets
+    calls = {"n": 0}
+
+    def flaky(*a, **k):
+        calls["n"] += 1
+        if calls["n"] <= n_kills:
+            raise InjectedKill("kill during write scan")
+        return orig(*a, **k)
+
+    monkeypatch.setattr(bz, "write_buckets", flaky)
+
+
+class TestResumableBuild:
+    CFG = dict(epsilon=0.35, recall_target=0.9, pad_align=64,
+               num_buckets=20, memory_budget_bytes=1 << 20,
+               io_coalesce=True, io_mode="prefetch")
+
+    def test_killed_build_resumes_without_rescanning(self, tmp_path,
+                                                     monkeypatch):
+        x = clustered_vectors(2500, 24, seed=9)
+        flat = FlatVectorStore.from_array(str(tmp_path / "x.bin"), x)
+        cfg = JoinConfig(**self.CFG)
+        wd = str(tmp_path / "idx")
+        _kill_write_scan(monkeypatch)
+        with pytest.raises(InjectedKill):
+            DiskJoinIndex.build(flat, cfg, wd)
+        assert os.path.isdir(os.path.join(wd, "build_phases"))
+        ops0 = flat.stats.snapshot()["read_ops"]
+        idx = DiskJoinIndex.build(flat, cfg, wd)
+        resumed_ops = flat.stats.snapshot()["read_ops"] - ops0
+        # sample + assign scans were loaded from phase markers
+        assert idx.build_timings["sample"] == 0.0
+        assert idx.build_timings["assign"] == 0.0
+        assert not os.path.isdir(os.path.join(wd, "build_phases"))
+
+        idx2 = DiskJoinIndex.build(flat, cfg, str(tmp_path / "fresh"))
+        fresh_ops = flat.stats.snapshot()["read_ops"] \
+            - ops0 - resumed_ops
+        assert resumed_ops < fresh_ops  # skipped scans saved real reads
+        r1, r2 = idx.self_join(), idx2.self_join()
+        assert np.array_equal(r1.pairs, r2.pairs)
+        idx.close()
+        idx2.close()
+
+    def test_config_change_discards_stale_phases(self, tmp_path,
+                                                 monkeypatch):
+        x = clustered_vectors(2500, 24, seed=9)
+        flat = FlatVectorStore.from_array(str(tmp_path / "x.bin"), x)
+        wd = str(tmp_path / "idx")
+        _kill_write_scan(monkeypatch)
+        with pytest.raises(InjectedKill):
+            DiskJoinIndex.build(flat, JoinConfig(**self.CFG), wd)
+        changed = dict(self.CFG, num_buckets=24)
+        idx = DiskJoinIndex.build(flat, JoinConfig(**changed), wd)
+        # stale markers were discarded: the scans actually re-ran
+        assert idx.build_timings["sample"] > 0.0
+        assert idx.num_buckets >= 24 - 4  # built under the NEW config
+        idx.close()
+
+    def test_phase_log_fingerprint_isolation(self, tmp_path):
+        log = PhaseLog(str(tmp_path / "ph"), "fp-a")
+        log.commit_arrays("sample", centers=np.ones((3, 2), np.float32))
+        assert log.has("sample")
+        # same fingerprint: a new handle still sees the phase
+        assert PhaseLog(str(tmp_path / "ph"), "fp-a").has("sample")
+        # different fingerprint: the committed phase is discarded
+        assert not PhaseLog(str(tmp_path / "ph"), "fp-b").has("sample")
