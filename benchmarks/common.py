@@ -20,6 +20,11 @@ from repro.store.vector_store import FlatVectorStore
 # container validates the same algorithms at laptop scale (repro band 5/5).
 SMALL = os.environ.get("REPRO_BENCH_SMALL", "0") == "1"
 
+# one seed for every figure's synthetic data: a regression diff between
+# two BENCH_*.json records is only meaningful when both ran identical
+# work, and the record carries the seed so regress.py can check that
+BENCH_SEED = int(os.environ.get("REPRO_BENCH_SEED", "1"))
+
 # perf-trajectory collection (benchmarks/run.py --json-out): emit() mirrors
 # every row here, keyed by figure module, and attach_stats() adds
 # trace-derived quantities; run.py diffs COLLECTED around each module and

@@ -1,0 +1,226 @@
+"""Perf-regression gate over ``run.py --json-out`` records.
+
+Compares a directory of fresh ``BENCH_<figure>.json`` records against
+the committed baselines in ``benchmarks/baselines/`` and reports, per
+common figure:
+
+  * **status** — a figure that passed at baseline must still pass.
+  * **wall_s** — multiplicative noise band (default ×3: smoke-scale CI
+    wall times jitter hugely; the gate is for order-of-magnitude
+    blowups, the trajectory archive is for trend analysis).
+  * **trace_stats** — every numeric stat present in both records,
+    direction-classified by name (``HIGHER_BETTER``/``LOWER_BETTER``
+    substrings; unknown names are report-only). Fraction-like values
+    (both within [0, 1.5]) use an absolute band (default 0.15), others
+    a multiplicative band.
+
+``--check`` exits 1 when any out-of-band regression survives; the full
+diff (regressions, improvements, in-band drift, coverage gaps) is
+written as JSON for CI artifact upload either way.
+
+Usage::
+
+    python benchmarks/run.py --json-out bench_out          # fresh records
+    python benchmarks/regress.py bench_out --check \\
+        --diff-out bench_out/regress_diff.json
+
+The comparison functions are pure (no I/O) so tests drive them with
+synthetic records.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "baselines")
+
+# direction classification by name substring (first match wins,
+# HIGHER_BETTER checked first). Unknown stats are reported, not gated.
+HIGHER_BETTER = ("goodput", "overlap", "hidden", "precision", "recall",
+                 "hit", "saved", "parity", "resumed")
+LOWER_BETTER = ("overhead", "drop", "error", "err", "wall", "elapsed",
+                "latency", "dropped")
+
+WALL_BAND = 3.0          # fresh wall may be up to 3× baseline
+FRAC_BAND = 0.15         # absolute band for fraction-like stats
+MULT_BAND = 2.0          # multiplicative band for other stats
+
+
+def classify(name: str) -> str:
+    """'higher' | 'lower' | 'unknown' — which direction is good."""
+    low = name.lower()
+    for frag in HIGHER_BETTER:
+        if frag in low:
+            return "higher"
+    for frag in LOWER_BETTER:
+        if frag in low:
+            return "lower"
+    return "unknown"
+
+
+def _is_fraction_like(a: float, b: float) -> bool:
+    return 0.0 <= a <= 1.5 and 0.0 <= b <= 1.5
+
+
+def compare_stat(name: str, base: float, fresh: float, *,
+                 frac_band: float = FRAC_BAND,
+                 mult_band: float = MULT_BAND) -> dict:
+    """One stat's verdict: ``{name, base, fresh, direction, verdict}``
+    with verdict ∈ regression | improvement | ok | info."""
+    direction = classify(name)
+    out = {"name": name, "base": base, "fresh": fresh,
+           "direction": direction}
+    if direction == "unknown":
+        out["verdict"] = "info"
+        return out
+    # delta in the "bad" direction, normalized to the band in use
+    if _is_fraction_like(base, fresh):
+        delta = fresh - base
+        bad = delta < -frac_band if direction == "higher" \
+            else delta > frac_band
+        good = delta > frac_band if direction == "higher" \
+            else delta < -frac_band
+    else:
+        hi, lo = base * mult_band, base / mult_band
+        if direction == "higher":
+            bad, good = fresh < lo, fresh > hi
+        else:
+            bad, good = fresh > hi, fresh < lo
+    out["verdict"] = ("regression" if bad
+                      else "improvement" if good else "ok")
+    return out
+
+
+def compare_records(base: dict, fresh: dict, *,
+                    wall_band: float = WALL_BAND) -> dict:
+    """Compare one figure's baseline vs fresh record → diff dict with
+    ``regressions`` (the gated list), ``improvements``, ``ok``,
+    ``info``."""
+    fig = base.get("figure") or fresh.get("figure")
+    diff = {"figure": fig, "regressions": [], "improvements": [],
+            "ok": [], "info": []}
+
+    def put(entry: dict) -> None:
+        key = {"regression": "regressions", "improvement": "improvements",
+               "ok": "ok", "info": "info"}[entry["verdict"]]
+        diff[key].append(entry)
+
+    if base.get("status") == "ok" and fresh.get("status") != "ok":
+        put({"name": "status", "base": base.get("status"),
+             "fresh": fresh.get("status"), "direction": "lower",
+             "verdict": "regression"})
+    bw, fw = base.get("wall_s"), fresh.get("wall_s")
+    if isinstance(bw, (int, float)) and isinstance(fw, (int, float)) \
+            and bw > 0:
+        put({"name": "wall_s", "base": bw, "fresh": fw,
+             "direction": "lower",
+             "verdict": "regression" if fw > bw * wall_band
+             else "improvement" if fw < bw / wall_band else "ok"})
+    bs = base.get("trace_stats") or {}
+    fs = fresh.get("trace_stats") or {}
+    for name in sorted(set(bs) & set(fs)):
+        b, f = bs[name], fs[name]
+        if isinstance(b, (int, float)) and isinstance(f, (int, float)) \
+                and not isinstance(b, bool) and not isinstance(f, bool):
+            put(compare_stat(name, float(b), float(f)))
+    for name in sorted(set(bs) - set(fs)):
+        diff["info"].append({"name": name, "base": bs[name],
+                             "fresh": None, "direction": "unknown",
+                             "verdict": "info"})
+    return diff
+
+
+def load_records(dirpath: str) -> dict:
+    """``{figure: record}`` for every BENCH_*.json in ``dirpath``."""
+    out = {}
+    if not os.path.isdir(dirpath):
+        return out
+    for fn in sorted(os.listdir(dirpath)):
+        if not (fn.startswith("BENCH_") and fn.endswith(".json")):
+            continue
+        with open(os.path.join(dirpath, fn)) as f:
+            rec = json.load(f)
+        out[rec.get("figure", fn[len("BENCH_"):-len(".json")])] = rec
+    return out
+
+
+def compare_dirs(fresh_dir: str, baseline_dir: str = BASELINE_DIR,
+                 *, wall_band: float = WALL_BAND) -> dict:
+    """Full run diff: per-figure comparisons over the figure
+    intersection, plus coverage notes for one-sided figures."""
+    base = load_records(baseline_dir)
+    fresh = load_records(fresh_dir)
+    figures = [compare_records(base[k], fresh[k], wall_band=wall_band)
+               for k in sorted(set(base) & set(fresh))]
+    return {
+        "baseline_dir": baseline_dir,
+        "fresh_dir": fresh_dir,
+        "compared": sorted(set(base) & set(fresh)),
+        "baseline_only": sorted(set(base) - set(fresh)),
+        "fresh_only": sorted(set(fresh) - set(base)),
+        "figures": figures,
+        "num_regressions": sum(len(d["regressions"]) for d in figures),
+    }
+
+
+def render(diff: dict) -> str:
+    lines = [f"perf-regress: {len(diff['compared'])} figure(s) compared "
+             f"against {diff['baseline_dir']}"]
+    for figd in diff["figures"]:
+        regs, imps = figd["regressions"], figd["improvements"]
+        if not regs and not imps:
+            lines.append(f"  {figd['figure']}: ok "
+                         f"({len(figd['ok'])} stats in band)")
+            continue
+        lines.append(f"  {figd['figure']}:")
+        for r in regs:
+            lines.append(f"    REGRESSION {r['name']}: "
+                         f"{r['base']} -> {r['fresh']} "
+                         f"(want {r['direction']})")
+        for i in imps:
+            lines.append(f"    improvement {i['name']}: "
+                         f"{i['base']} -> {i['fresh']}")
+    if diff["baseline_only"]:
+        lines.append(f"  not re-run (baseline only): "
+                     f"{', '.join(diff['baseline_only'])}")
+    if diff["fresh_only"]:
+        lines.append(f"  new figures (no baseline yet): "
+                     f"{', '.join(diff['fresh_only'])}")
+    lines.append(f"  total regressions: {diff['num_regressions']}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("fresh_dir",
+                    help="directory of fresh BENCH_*.json records")
+    ap.add_argument("--baselines", default=BASELINE_DIR,
+                    help="baseline record directory "
+                         "(default: benchmarks/baselines)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 when out-of-band regressions exist")
+    ap.add_argument("--wall-band", type=float, default=WALL_BAND,
+                    help="allowed fresh/baseline wall-time ratio")
+    ap.add_argument("--diff-out", default=None,
+                    help="write the full diff JSON here (CI artifact)")
+    args = ap.parse_args(argv)
+
+    diff = compare_dirs(args.fresh_dir, args.baselines,
+                        wall_band=args.wall_band)
+    print(render(diff))
+    if args.diff_out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.diff_out)),
+                    exist_ok=True)
+        with open(args.diff_out, "w") as f:
+            json.dump(diff, f, indent=2)
+        print(f"# wrote {args.diff_out}")
+    if args.check and diff["num_regressions"] > 0:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -26,8 +26,8 @@ from benchmarks import (common, fig7_baselines, fig8_recall, fig9_memory,
                         fig17_ablation, fig18_pruning, fig19_pipeline,
                         fig20_striping, fig21_online, fig22_scheduler,
                         fig23_device_pipeline, fig24_planner,
-                        fig25_resilience, kernel_roofline, obs_trace,
-                        randomness)
+                        fig25_resilience, fig26_live, kernel_roofline,
+                        obs_trace, randomness)
 
 MODULES = [
     ("fig7_baselines", fig7_baselines),
@@ -48,6 +48,7 @@ MODULES = [
     ("fig23_device_pipeline", fig23_device_pipeline),
     ("fig24_planner", fig24_planner),
     ("fig25_resilience", fig25_resilience),
+    ("fig26_live", fig26_live),
     ("obs_trace", obs_trace),
     ("randomness", randomness),
     ("kernel_roofline", kernel_roofline),
@@ -64,12 +65,30 @@ def _json_default(o):
     return str(o)
 
 
+def _git_sha() -> str | None:
+    """Commit the record was produced at, best-effort (regress.py prints
+    it in diffs; records from exported tarballs just omit it)."""
+    import subprocess
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)), timeout=10)
+    except (OSError, subprocess.TimeoutExpired):
+        return None
+    sha = out.stdout.strip()
+    return sha if out.returncode == 0 and sha else None
+
+
 def _write_record(json_out: str, name: str, *, rows, stats, elapsed,
                   status, fingerprint) -> str:
     rec = {
         "figure": name,
         "status": status,
         "elapsed_s": elapsed,
+        "wall_s": elapsed,
+        "seed": common.BENCH_SEED,
+        "git_sha": _git_sha(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
         "fingerprint": fingerprint,
         "rows": rows,
         "trace_stats": stats,

@@ -20,6 +20,7 @@ runs the paper's workflow as cheap queries against that build:
 import os
 import sys
 import tempfile
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -132,6 +133,27 @@ def main() -> None:
     print(f"metrics sections: {sorted(metrics)}; "
           f"pipeline overlap_efficiency="
           f"{metrics['pipeline']['overlap_efficiency']:.3f}")
+
+    # -- watch your serving SLOs: live rollups + burn-rate alerts ------------
+    from repro.obs import dash  # noqa: E402
+    from repro.obs.live import Slo  # noqa: E402
+
+    alerts = []
+    index.attach_live(                        # streaming rollups + SLO
+        window_s=0.2,                         #   monitor + live cost
+        slos=(Slo.latency("query_p95", "query.execute",  # calibration
+                          threshold_s=0.05, objective=0.9),),
+        on_alert=alerts.append)
+    for i in range(40):
+        svc.query(x[i], k=5)
+    time.sleep(0.25)                          # let a rollup window close
+    live = index.metrics_snapshot()["live"]   # same surface as everything
+    qx = live["spans"]["query.execute"]
+    print(f"\nlive rollup: {qx['count']} queries, "
+          f"p95={qx['p95'] * 1e3:.2f} ms, "
+          f"{len(alerts)} SLO alert(s) — one-screen view:")
+    print(dash.render(index))                 # dash.watch(index) to follow
+    index.detach_live()
 
     # -- reattach later without rescanning -----------------------------------
     index.close()

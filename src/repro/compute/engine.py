@@ -172,9 +172,18 @@ class _EngineBase:
 
     def _charge_link(self, nbytes: int) -> None:
         """Emulated host↔device link cost (``emulate_xfer_gb_s``) — the
-        transfer-volume analogue of the store's emulated read latency."""
+        transfer-volume analogue of the store's emulated read latency.
+        Traced as a ``link.xfer`` span (bytes arg) so the live
+        calibrator can derive an observed GB/s for the cost model."""
         if self.xfer_gb_s > 0 and nbytes > 0:
-            time.sleep(nbytes / (self.xfer_gb_s * 1e9))
+            if self.tracer.enabled:
+                t0 = time.perf_counter()
+                time.sleep(nbytes / (self.xfer_gb_s * 1e9))
+                self.tracer.complete("link.xfer", t0,
+                                     time.perf_counter() - t0,
+                                     bytes=int(nbytes))
+            else:
+                time.sleep(nbytes / (self.xfer_gb_s * 1e9))
 
     def results(self) -> tuple[list[np.ndarray], list[np.ndarray]]:
         return self.pairs_out, self.dists_out

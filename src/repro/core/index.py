@@ -59,10 +59,11 @@ from repro.core.types import (BUILD_TIME_FIELDS, QUERY_TIME_FIELDS,
                               JoinResult, QueryConfig, finalize_timings,
                               merge_config, resolve_bucket_capacity,
                               resolve_cache_buckets, split_config)
-from repro.ft.atomic import atomic_write_json
+from repro.ft.atomic import AsyncCommitter, atomic_write_json
 from repro.io import BufferPool, PipelineStats
 from repro.io.retry import read_with_retry
-from repro.obs import MetricsRegistry, get_tracer
+from repro.obs import MetricsRegistry, enable_tracing, get_tracer
+from repro.obs.live import LiveObserver, default_serving_slos
 from repro.plan import (SKETCH_FILE, CardinalityEstimator, CostModel,
                         Planner)
 from repro.store.striped_store import StripedBucketedVectorStore
@@ -101,6 +102,8 @@ class DiskJoinIndex:
         self.metrics.register_provider("pipeline", self.stats.snapshot)
         self.metrics.register_provider("io",
                                        lambda: self.store.stats.snapshot())
+        # span drops must be visible without holding the tracer object
+        self.metrics.register_provider("tracer", self._tracer_section)
         self.bucket_capacity = resolve_bucket_capacity(build_config,
                                                        meta.sizes)
         self._pool: BufferPool | None = None
@@ -121,6 +124,16 @@ class DiskJoinIndex:
         self._estimator_lock = threading.Lock()
         self._sketch_path = os.path.join(workdir, SKETCH_FILE)
         self._warm_quota: int | None = None
+        # live observability (repro.obs.live): rollups + SLO monitors +
+        # cost recalibration, attached on demand via attach_live()
+        self._live: LiveObserver | None = None
+        self._live_key: str | None = None
+        # periodic residency snapshots (ft follow-on): an async writer
+        # thread persists residency.json on an interval so a crash
+        # mid-serve still restarts warm; never blocks the serve path
+        self._residency_committer: AsyncCommitter | None = None
+        self._residency_interval = 0.0
+        self._residency_next = float("inf")
         self._closed = False
 
     # -- construction ---------------------------------------------------------
@@ -388,6 +401,73 @@ class DiskJoinIndex:
     def _tracer(self):
         return self.tracer if self.tracer is not None else get_tracer()
 
+    def _tracer_section(self) -> dict:
+        """``metrics_snapshot()["tracer"]``: whether tracing is on, how
+        many events each thread's ring holds, and — crucially — how many
+        were silently dropped to ring wrap-around."""
+        tr = self._tracer()
+        if not tr.enabled:
+            return {"enabled": False}
+        out = {"enabled": True}
+        out.update(tr.ring_stats())
+        return out
+
+    # -- live observability (repro.obs.live) -----------------------------------
+    @property
+    def live(self) -> "LiveObserver | None":
+        """The attached live observer, or None (``repro.obs.dash`` reads
+        this)."""
+        return self._live
+
+    def attach_live(self, *, window_s: float = 1.0, windows: int = 60,
+                    slos=None, calibrate: bool = True, on_alert=None,
+                    tracer=None, residency_interval_s: float | None = None,
+                    **observer_kw) -> "LiveObserver":
+        """Attach continuous observability to this session: streaming
+        rollups of every span/instant/counter the session records, SLO
+        burn-rate monitors over them, and live cost-model recalibration
+        feeding ``_planner_for``.
+
+        Uses the session tracer; when no tracer is recording, the
+        module-level tracer is enabled (and disabled again on
+        ``detach_live``/``close`` if still ours). ``slos=None`` watches
+        ``default_serving_slos()``; pass ``slos=()`` for rollups only.
+        ``residency_interval_s`` additionally turns on periodic in-run
+        residency snapshots (``enable_residency_snapshots``)."""
+        if self._live is not None:
+            raise RuntimeError("live observability is already attached; "
+                               "detach_live() first")
+        tr = tracer if tracer is not None else self._tracer()
+        owns = False
+        if not tr.enabled:
+            tr = enable_tracing()
+            owns = True
+        self.tracer = tr  # pin: session spans keep landing in this tracer
+        obs = LiveObserver(
+            tr, window_s=window_s, windows=windows,
+            slos=default_serving_slos() if slos is None else slos,
+            pipeline_source=self.stats.snapshot, metrics=self.metrics,
+            on_alert=on_alert, calibrate=calibrate, owns_tracing=owns,
+            **observer_kw)
+        self._live = obs
+        self._live_key = self.metrics.register_provider("live",
+                                                        obs.section)
+        if residency_interval_s is not None:
+            self.enable_residency_snapshots(residency_interval_s)
+        return obs
+
+    def detach_live(self) -> None:
+        """Remove the live observer (sink, provider, owned tracing)."""
+        obs, self._live = self._live, None
+        if obs is None:
+            return
+        if self._live_key is not None:
+            self.metrics.unregister_provider(self._live_key)
+            self._live_key = None
+        if self.tracer is obs.tracer and obs.owns_tracing:
+            self.tracer = None
+        obs.close()
+
     # -- cost-based planning ---------------------------------------------------
     @property
     def estimator(self) -> CardinalityEstimator:
@@ -423,8 +503,17 @@ class DiskJoinIndex:
         """A planner bound to this session's estimator and a cost model
         calibrated from the session's telemetry + this call's emulation
         knobs. Cheap to construct per call — the emulated link/latency
-        may differ between calls, so the cost model cannot be cached."""
-        cost = CostModel.from_telemetry(cfg, self.stats.snapshot())
+        may differ between calls, so the cost model cannot be cached.
+
+        With ``attach_live()`` active, the observer's rolling
+        span-derived constants join the calibration as the ``live``
+        provenance tier (measured > live > config > static): long runs'
+        wave plans re-price from what the hardware is doing *now* — the
+        link especially, which no cumulative counter measures."""
+        live = self._live.live_constants() if self._live is not None \
+            else None
+        cost = CostModel.from_telemetry(cfg, self.stats.snapshot(),
+                                        live=live)
         return Planner(self.estimator, cost, tracer=self._tracer(),
                        metrics=self.metrics, pstats=self.stats)
 
@@ -786,6 +875,7 @@ class DiskJoinIndex:
         self._read_and_verify(self._sorted_by_layout(list(probe)), cfg,
                               verify, skip=skip)
         self.stats.add("queries", Q.shape[0])
+        self._maybe_snapshot_residency()
 
         out = []
         for qi in range(Q.shape[0]):
@@ -961,6 +1051,7 @@ class DiskJoinIndex:
 
     def _read_misses_sync(self, misses: list[int], cfg: JoinConfig,
                           pool: BufferPool, verify, skip=None) -> None:
+        tr = self._tracer()
         for b in misses:
             if skip is not None and skip(b):
                 # every prober's deadline passed since the wave started:
@@ -975,20 +1066,28 @@ class DiskJoinIndex:
                 size = int(self.meta.sizes[b])
                 vecs = np.empty((size, self.dim), np.float32)
                 ids = np.empty(size, np.int64)
+                t0 = time.perf_counter() if tr.enabled else 0.0
                 n = read_with_retry(
                     lambda: self.store.read_bucket_into(
                         b, vecs, ids, pad_value=PAD_COORD),
                     retries=cfg.io_retries,
                     backoff_s=cfg.io_retry_backoff_s, stats=self.stats)
+                if tr.enabled:
+                    tr.complete("io.read", t0, time.perf_counter() - t0,
+                                buckets=1, src="query")
                 self.stats.add("query_fallback_reads", 1)
                 verify(b, vecs, ids, n)
                 continue
+            t0 = time.perf_counter() if tr.enabled else 0.0
             n = read_with_retry(
                 lambda: self.store.read_bucket_into(
                     b, pool.vecs(slot), pool.ids(slot),
                     pad_value=PAD_COORD),
                 retries=cfg.io_retries,
                 backoff_s=cfg.io_retry_backoff_s, stats=self.stats)
+            if tr.enabled:
+                tr.complete("io.read", t0, time.perf_counter() - t0,
+                            buckets=1, src="query")
             self.stats.add("query_reads", 1)
             try:
                 verify(b, pool.vecs(slot), pool.ids(slot), n)
@@ -1061,21 +1160,24 @@ class DiskJoinIndex:
             return list(self._warm)
 
     # -- serving fast restart (repro.ft) --------------------------------------
-    def save_residency_snapshot(self) -> int:
-        """Persist the warm cache's bucket ids (LRU order, oldest first)
-        to ``residency.json`` so the next ``open(warm_start=True)`` can
-        pre-fault them. Slabs a concurrent query still has pinned are
-        excluded — their residency is transient, not cache state. Returns
-        the number of bucket ids written (0 on a read-only workdir)."""
+    def _residency_ids(self) -> list[int]:
+        """Warm bucket ids eligible for the residency snapshot (LRU
+        order, oldest first). Slabs a concurrent query still has pinned
+        are excluded — their residency is transient, not cache state."""
         with self._warm_lock:
             pool = self._pool
             if pool is None:
-                ids = []
-            else:
-                # warm entries hold exactly one pool reference; a higher
-                # refcount means some in-flight verify has it pinned
-                ids = [int(b) for b, (slot, _) in self._warm.items()
-                       if pool.refcount(slot) == 1]
+                return []
+            # warm entries hold exactly one pool reference; a higher
+            # refcount means some in-flight verify has it pinned
+            return [int(b) for b, (slot, _) in self._warm.items()
+                    if pool.refcount(slot) == 1]
+
+    def save_residency_snapshot(self) -> int:
+        """Persist the warm cache's bucket ids to ``residency.json`` so
+        the next ``open(warm_start=True)`` can pre-fault them. Returns
+        the number of bucket ids written (0 on a read-only workdir)."""
+        ids = self._residency_ids()
         try:
             atomic_write_json(os.path.join(self.workdir, RESIDENCY_NAME),
                               {"format": "diskjoin-residency/v1",
@@ -1083,6 +1185,54 @@ class DiskJoinIndex:
         except OSError:
             return 0  # read-only workdir: restart just comes up cold
         return len(ids)
+
+    def enable_residency_snapshots(self, interval_s: float = 30.0) -> None:
+        """Persist ``residency.json`` periodically *during* serving, not
+        only at ``close()`` — a crash mid-serve then still restarts warm.
+        The snapshot is captured at query-execution boundaries (a cheap
+        id-list copy under the warm lock) and written by an
+        ``AsyncCommitter`` daemon via ``try_submit``: the serve path
+        never blocks on the disk, and a slow write simply defers the
+        snapshot to the next boundary."""
+        self._residency_interval = float(interval_s)
+        if self._residency_committer is None:
+            self._residency_committer = AsyncCommitter(
+                name="residency-snapshot")
+        self._residency_next = time.perf_counter() + \
+            self._residency_interval
+
+    def disable_residency_snapshots(self) -> None:
+        committer, self._residency_committer = \
+            self._residency_committer, None
+        self._residency_next = float("inf")
+        if committer is not None:
+            committer.close()
+
+    def _maybe_snapshot_residency(self) -> bool:
+        """Called at query-execution boundaries: submit an async
+        residency write when the interval elapsed and the writer is
+        idle. Returns whether a snapshot was submitted."""
+        if self._residency_committer is None:
+            return False
+        now = time.perf_counter()
+        if now < self._residency_next:
+            return False
+        self._residency_next = now + self._residency_interval
+        ids = self._residency_ids()
+        path = os.path.join(self.workdir, RESIDENCY_NAME)
+
+        def write():
+            try:
+                atomic_write_json(path,
+                                  {"format": "diskjoin-residency/v1",
+                                   "buckets": ids})
+            except OSError:
+                pass  # read-only workdir: keep serving
+
+        if not self._residency_committer.try_submit(write):
+            return False  # previous write still in flight
+        self.stats.add("residency_snapshots", 1)
+        return True
 
     def _warm_start(self) -> None:
         """Replay a persisted residency snapshot: pre-fault its buckets
@@ -1166,6 +1316,17 @@ class DiskJoinIndex:
         if self._closed:
             return
         self._closed = True
+        if self._live is not None:
+            try:
+                self.detach_live()
+            except Exception:
+                pass  # observability teardown must not block release
+        if self._residency_committer is not None:
+            try:
+                self.disable_residency_snapshots()
+            except Exception:
+                pass  # a failed last snapshot is re-raised there; the
+                #       close() below still writes a fresh one inline
         with self._warm_lock:
             if self._pool is not None:
                 # snapshot BEFORE dropping: the warm set is the restart's

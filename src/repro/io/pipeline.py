@@ -46,6 +46,7 @@ class PipelineStats:
     # serving fast restart (repro.ft): buckets pre-faulted into the warm
     # cache from a residency snapshot by DiskJoinIndex.open(warm_start=True)
     warm_prefaults: int = 0
+    residency_snapshots: int = 0  # periodic in-run snapshots submitted
     # online point-query serving (DiskJoinIndex.query — shares this stats
     # object with the batch joins of the same index session)
     queries: int = 0              # point queries answered

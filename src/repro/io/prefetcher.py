@@ -138,7 +138,11 @@ class SchedulePrefetcher:
                             self.pool.unpin(s)
                         return
                     self._issued = k + len(group)
-                    self.stats.observe_depth(self._issued - self._consumed)
+                    depth = self._issued - self._consumed
+                    self.stats.observe_depth(depth)
+                    if self.tracer.enabled:
+                        # rollup-visible queue depth (live dashboards)
+                        self.tracer.counter("io.depth", value=depth)
                     self._dev_inflight[dev] += len(group)
                     self.stats.observe_device_depth(dev,
                                                     self._dev_inflight[dev])

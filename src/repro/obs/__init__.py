@@ -30,6 +30,17 @@ from repro.obs.metrics import (
     MetricsRegistry,
     log_bounds,
 )
+from repro.obs.live import (
+    Alert,
+    LiveCalibrator,
+    LiveObserver,
+    RollupWindow,
+    Slo,
+    SloMonitor,
+    TimeSeries,
+    default_serving_slos,
+    merge_live_sections,
+)
 
 __all__ = [
     "NOOP_SPAN",
@@ -46,4 +57,13 @@ __all__ = [
     "Gauge",
     "Histogram",
     "log_bounds",
+    "TimeSeries",
+    "RollupWindow",
+    "Slo",
+    "SloMonitor",
+    "Alert",
+    "LiveCalibrator",
+    "LiveObserver",
+    "default_serving_slos",
+    "merge_live_sections",
 ]

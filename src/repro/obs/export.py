@@ -29,13 +29,25 @@ from __future__ import annotations
 
 import bisect
 import json
+import warnings
 from typing import Iterable
 
 _PHASES = frozenset("XiICbensftMOP")  # common Trace Event Format phases
 
 
 def export_chrome_trace(tracer, path: str) -> str:
-    """Write ``tracer``'s events as Chrome-trace JSON → ``path``."""
+    """Write ``tracer``'s events as Chrome-trace JSON → ``path``.
+
+    Warns when the tracer's rings wrapped (``tracer.dropped > 0``): the
+    exported trace is then missing its oldest events and overlap/critical-
+    path numbers derived from it undercount — raise ``ring_capacity``."""
+    dropped = getattr(tracer, "dropped", 0)
+    if dropped:
+        warnings.warn(
+            f"trace export is incomplete: {dropped} events were "
+            f"overwritten by ring wrap-around; re-run with a larger "
+            f"ring_capacity (enable_tracing(ring_capacity=...))",
+            stacklevel=2)
     events = tracer.events()
     # thread-name metadata rows make the Perfetto timeline readable
     for tid, tname in sorted(tracer.thread_names().items()):

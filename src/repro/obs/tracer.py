@@ -140,6 +140,9 @@ class Tracer:
         self._tls = threading.local()
         self._rings: list[tuple[int, str, _Ring]] = []
         self._reg_lock = threading.Lock()
+        # streaming consumers (repro.obs.live rollups): a usually-empty
+        # tuple so the no-sink hot path pays one falsy check
+        self._sinks: tuple = ()
 
     # -- recording (hot path) -------------------------------------------------
     def _ring(self) -> _Ring:
@@ -154,6 +157,26 @@ class Tracer:
 
     def _record(self, ev) -> None:
         self._ring().append(ev)
+        if self._sinks:
+            for fn in self._sinks:
+                try:
+                    fn(ev)
+                except Exception:  # a broken consumer must not kill the
+                    pass           # recording thread (serve path)
+
+    # -- streaming consumers --------------------------------------------------
+    def add_sink(self, fn) -> None:
+        """Subscribe ``fn(event_tuple)`` to every recorded event — the
+        raw ``(ph, name, ts, dur, args, async_id)`` tuples, called on the
+        recording thread. Sinks must be cheap and never raise (exceptions
+        are swallowed). ``repro.obs.live.TimeSeries.on_event`` is the
+        canonical sink."""
+        with self._reg_lock:
+            self._sinks = self._sinks + (fn,)
+
+    def remove_sink(self, fn) -> None:
+        with self._reg_lock:
+            self._sinks = tuple(s for s in self._sinks if s != fn)
 
     def span(self, name: str, **args):
         """Nestable wall-time span context manager (Chrome 'X' event)."""
@@ -233,6 +256,20 @@ class Tracer:
         """Events lost to ring wrap-around (size ``ring_capacity`` up)."""
         with self._reg_lock:
             return sum(r.dropped for _, _, r in self._rings)
+
+    def ring_stats(self) -> dict:
+        """Per-thread ring occupancy/capacity/drop counts plus totals —
+        the session metrics surface exposes this so span drops are
+        visible without holding the tracer object."""
+        with self._reg_lock:
+            rings = list(self._rings)
+        threads = [{"tid": tid, "thread": tname, "occupancy": r.n,
+                    "capacity": r.cap, "dropped": r.dropped}
+                   for tid, tname, r in rings]
+        return {"dropped": sum(t["dropped"] for t in threads),
+                "events": sum(t["occupancy"] for t in threads),
+                "ring_capacity": self.ring_capacity,
+                "threads": threads}
 
     def clear(self) -> None:
         """Drop all recorded events (rings stay registered)."""

@@ -57,27 +57,56 @@ class CostModel:
     provenance: dict = dataclasses.field(default_factory=dict)
 
     @classmethod
-    def from_telemetry(cls, config=None, pipeline: dict | None = None
-                       ) -> "CostModel":
-        """Calibrate from a ``PipelineStats.snapshot()`` dict and/or the
-        session config's emulation knobs; static fallbacks otherwise."""
+    def from_telemetry(cls, config=None, pipeline: dict | None = None,
+                       live: dict | None = None) -> "CostModel":
+        """Calibrate from a ``PipelineStats.snapshot()`` dict, the
+        rolling span-derived constants of a ``repro.obs.live``
+        ``LiveCalibrator`` (its ``constants()`` dict, or the calibrator
+        itself), and/or the session config's emulation knobs; static
+        fallbacks otherwise.
+
+        Per-coefficient priority is **measured > live > config >
+        static**: a batch pipeline's own cumulative counters stay
+        authoritative where they exist (per-bucket read), the live tier's
+        windowed medians cover everything the counters can't see or that
+        drifted since plan time (the link, a mid-run latency shift on a
+        session passing windowed rather than cumulative telemetry), the
+        emulation knobs predict what the workload *will* pay, and the
+        static defaults catch a cold session."""
         m = cls()
         prov = {"read_s_per_bucket": "static", "link": "static(free)",
                 "host_cell_ns": "static", "device_cell_ns": "static"}
+        if live is not None and hasattr(live, "constants"):
+            live = live.constants()
+        live = live or {}
+
+        def live_tag(entry: dict) -> str:
+            return (f"live({entry.get('samples', '?')} spans/"
+                    f"{entry.get('windows', '?')} windows)")
+
         emu_read = float(getattr(config, "emulate_read_latency_s", 0.0)
                          or 0.0) if config is not None else 0.0
+        live_read = live.get("read_s_per_bucket")
         if pipeline and pipeline.get("loads", 0) > 0 \
                 and pipeline.get("read_s", 0.0) > 0.0:
             m.read_s_per_bucket = (pipeline["read_s"]
                                    / pipeline["loads"])
             prov["read_s_per_bucket"] = (
                 f"measured({pipeline['loads']} loads)")
+        elif live_read and live_read.get("value", 0.0) > 0.0:
+            m.read_s_per_bucket = float(live_read["value"])
+            prov["read_s_per_bucket"] = live_tag(live_read)
         elif emu_read > 0.0:
             m.read_s_per_bucket = emu_read
             prov["read_s_per_bucket"] = "config(emulate_read_latency_s)"
         emu_xfer = float(getattr(config, "emulate_xfer_gb_s", 0.0)
                          or 0.0) if config is not None else 0.0
-        if emu_xfer > 0.0:
+        live_link = live.get("h2d_gb_s")
+        if live_link and live_link.get("value", 0.0) > 0.0:
+            # no counter measures the link, so live IS its top tier
+            m.h2d_gb_s = m.d2h_gb_s = float(live_link["value"])
+            prov["link"] = live_tag(live_link)
+        elif emu_xfer > 0.0:
             m.h2d_gb_s = m.d2h_gb_s = emu_xfer
             prov["link"] = "config(emulate_xfer_gb_s)"
         m.provenance = prov

@@ -35,6 +35,7 @@ import numpy as np
 from repro.core.index import DiskJoinIndex
 from repro.io import PipelineStats
 from repro.obs import MetricsRegistry
+from repro.obs.live import merge_live_sections
 from repro.serve.scheduler import QueryScheduler, _check_k, order_result
 
 _EMPTY = (np.zeros(0, np.int64), np.zeros(0, np.float32))
@@ -210,7 +211,22 @@ class IndexRouter:
                                         for s in self.shards])
         if isinstance(merged.get("pipeline"), list):
             merged["pipeline"] = PipelineStats.merge(merged["pipeline"])
+        if isinstance(merged.get("live"), list):
+            # per-shard rollup windows share log-bucket bounds, so the
+            # span histograms merge exactly (same path as _merge_hist)
+            merged["live"] = merge_live_sections(merged["live"])
         return merged
+
+    def attach_live(self, **kw) -> list:
+        """``DiskJoinIndex.attach_live`` on every shard (same kwargs);
+        returns the per-shard observers. ``repro.obs.dash`` renders a
+        router by merging these shards' live sections."""
+        return [s.attach_live(**kw) for s in self.shards]
+
+    def detach_live(self) -> None:
+        for s in self.shards:
+            if s.live is not None:
+                s.detach_live()
 
     def snapshot(self) -> dict:
         """Router fan-out counters plus every shard scheduler's snapshot

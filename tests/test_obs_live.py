@@ -1,0 +1,768 @@
+"""Live observability (repro.obs.live): streaming rollups, SLO
+burn-rate monitors, live cost calibration, tracer sinks/ring stats, the
+fleet merge through IndexRouter.metrics_snapshot (exact histogram-merge
+path, zero-traffic shard included), periodic in-run residency snapshots,
+the text dashboard, and the perf-regression comparator."""
+import io
+import json
+import os
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import DiskJoinIndex, JoinConfig
+from repro.data import clustered_vectors
+from repro.obs import (Histogram, MetricsRegistry, disable_tracing,
+                       enable_tracing, get_tracer, trace_session)
+from repro.obs import dash
+from repro.obs.live import (Alert, LiveCalibrator, LiveObserver, Slo,
+                            SloMonitor, TimeSeries, default_serving_slos,
+                            merge_live_sections)
+from repro.plan import CostModel
+from repro.serve import IndexRouter
+from repro.store.vector_store import FlatVectorStore
+
+# benchmarks/ is a namespace package rooted at the repo top; regress.py's
+# pure comparison functions are unit-tested here
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+
+# -- synthetic tracer-event tuples (the exact shapes Tracer._record sees) ----
+
+def X(name, ts, dur, **args):
+    return ("X", name, ts, dur, args or None, None)
+
+
+def I(name, ts, **args):  # noqa: E743 - mirrors the Chrome phase letter
+    return ("i", name, ts, 0.0, args or None, None)
+
+
+def C(name, ts, value):
+    return ("C", name, ts, 0.0, {"value": value}, None)
+
+
+def B(name, ts, aid, **args):
+    return ("b", name, ts, 0.0, args or None, aid)
+
+
+def E(name, ts, aid, **args):
+    return ("e", name, ts, 0.0, args or None, aid)
+
+
+@pytest.fixture(autouse=True)
+def _no_global_tracer():
+    """Every test starts and ends with tracing disabled."""
+    disable_tracing()
+    yield
+    disable_tracing()
+
+
+def _build_index(tmp_path, n=3000, dim=16, seed=3, sub="idx", **cfg_kw):
+    x = clustered_vectors(n, dim, seed=seed)
+    store = FlatVectorStore.from_array(str(tmp_path / f"{sub}.bin"), x)
+    base = dict(epsilon=0.35, recall_target=0.9, pad_align=64,
+                num_buckets=max(16, n // 150),
+                memory_budget_bytes=max(1 << 20, x.nbytes // 10))
+    base.update(cfg_kw)
+    return DiskJoinIndex.build(store, JoinConfig(**base),
+                               str(tmp_path / sub)), x
+
+
+# ---------------------------------------------------------------------------
+# TimeSeries: folding, pairing, windowing
+# ---------------------------------------------------------------------------
+
+class TestTimeSeries:
+    def test_folds_spans_with_exact_counts_and_units(self):
+        ts = TimeSeries(window_s=10.0)
+        for dur in (1e-4, 2e-4, 3e-4):
+            ts.on_event(X("io.read", 0.1, dur, buckets=2))
+        ts.on_event(X("io.read", 0.2, 4e-4, buckets=1, dropped=True))
+        ts.poll(now=100.0)  # close the window
+        agg = ts.span_aggregate("io.read")
+        assert agg["count"] == 4
+        assert agg["total_s"] == pytest.approx(1e-3)
+        assert agg["units"] == pytest.approx(7.0)   # 2+2+2+1 buckets
+        assert agg["bad"] == 1
+        assert agg["min"] == pytest.approx(1e-4)
+        assert agg["max"] == pytest.approx(4e-4)
+        assert sum(agg["buckets"]) == 4
+
+    def test_percentiles_agree_with_histogram_percentile_from(self):
+        ts = TimeSeries(window_s=10.0)
+        durs = [1e-5 * (i + 1) for i in range(50)]
+        for d in durs:
+            ts.on_event(X("s", 0.5, d))
+        ts.poll(now=100.0)
+        agg = ts.span_aggregate("s")
+        assert agg["p95"] == Histogram.percentile_from(
+            ts.bounds, agg["buckets"], 95)
+        assert ts.percentile("s", 50) == agg["p50"]
+
+    def test_async_pairs_fold_as_latency_spans(self):
+        ts = TimeSeries(window_s=10.0)
+        ts.on_event(B("serve.request", 1.0, 7))
+        ts.on_event(E("serve.request", 1.25, 7))
+        ts.on_event(E("serve.request", 1.5, 999))  # unmatched end: dropped
+        ts.poll(now=100.0)
+        agg = ts.span_aggregate("serve.request")
+        assert agg["count"] == 1
+        assert agg["total_s"] == pytest.approx(0.25)
+
+    def test_async_end_args_mark_bad(self):
+        ts = TimeSeries(window_s=10.0)
+        ts.on_event(B("serve.request", 1.0, 1))
+        ts.on_event(E("serve.request", 1.1, 1, dropped=True))
+        ts.on_event(B("serve.request", 1.0, 2))
+        ts.on_event(E("serve.request", 1.2, 2))
+        ts.poll(now=100.0)
+        agg = ts.span_aggregate("serve.request")
+        assert agg["count"] == 2 and agg["bad"] == 1
+
+    def test_counters_and_instants_roll_up(self):
+        ts = TimeSeries(window_s=10.0)
+        for v in (3, 9, 5):
+            ts.on_event(C("io.depth", 0.1, v))
+        ts.on_event(I("slo.alert", 0.2, slo="x"))
+        ts.on_event(I("slo.alert", 0.3, slo="x"))
+        ts.poll(now=100.0)
+        sec = ts.section()
+        assert sec["counters"]["io.depth"] == {"last": 5, "max": 9, "n": 3}
+        assert sec["instants"]["slo.alert"] == 2
+
+    def test_windows_close_in_order_and_notify_subscribers(self):
+        ts = TimeSeries(window_s=1.0, windows=8)
+        closed = []
+        ts.subscribe(closed.append)
+        ts.on_event(X("s", 0.5, 1e-3))
+        ts.on_event(X("s", 1.6, 1e-3))   # closes [0.5, 1.5)
+        ts.on_event(X("s", 2.7, 1e-3))   # closes [1.5, 2.5)
+        assert [w.t0 for w in closed] == [0.5, 1.5]
+        assert closed[0].spans["s"].count == 1
+        assert len(ts.recent()) == 2
+
+    def test_long_gap_snaps_grid_instead_of_looping(self):
+        ts = TimeSeries(window_s=0.01, windows=4)
+        ts.on_event(X("s", 0.0, 1e-3))
+        t0 = time.perf_counter()
+        ts.on_event(X("s", 1e6, 1e-3))   # ~1e8 windows of idle gap
+        assert time.perf_counter() - t0 < 0.5
+        assert ts.current.t0 <= 1e6 < ts.current.t1
+
+    def test_broken_subscriber_does_not_stop_folding(self):
+        ts = TimeSeries(window_s=1.0)
+
+        def bad(_):
+            raise RuntimeError("boom")
+        got = []
+        ts.subscribe(bad)
+        ts.subscribe(got.append)
+        ts.on_event(X("s", 0.1, 1e-3))
+        ts.on_event(X("s", 5.0, 1e-3))   # closes 4 windows incl. empties
+        assert len(got) == 4
+        assert got[0].spans["s"].count == 1
+
+    def test_rate_and_unit_cost_series(self):
+        ts = TimeSeries(window_s=1.0)
+        for t in (0.1, 0.2, 0.3):
+            ts.on_event(X("io.read", t, 2e-4, buckets=2))
+        ts.poll(now=1.2)
+        assert ts.rate("io.read") == pytest.approx(3.0)
+        [(s_per_unit, cnt)] = ts.unit_cost_series("io.read")
+        assert s_per_unit == pytest.approx(1e-4)   # 6e-4 s over 6 buckets
+        assert cnt == 3
+
+
+# ---------------------------------------------------------------------------
+# Tracer sinks + ring stats + export drop warning
+# ---------------------------------------------------------------------------
+
+class TestTracerSink:
+    def test_sink_receives_all_phases_and_remove_stops_delivery(self):
+        tr = enable_tracing()
+        ts = TimeSeries(window_s=1e9)
+        tr.add_sink(ts.on_event)
+        with tr.span("a"):
+            pass
+        tr.instant("i1")
+        tr.counter("c1", 4)
+        tr.async_begin("r", 1)
+        tr.async_end("r", 1)
+        assert ts.events_folded == 5
+        tr.remove_sink(ts.on_event)   # bound-method equality removal
+        tr.instant("i2")
+        assert ts.events_folded == 5
+
+    def test_broken_sink_does_not_break_recording(self):
+        tr = enable_tracing()
+
+        def bad(_ev):
+            raise ValueError("sink bug")
+        tr.add_sink(bad)
+        tr.instant("x")
+        assert any(e["name"] == "x" for e in tr.events())
+
+    def test_ring_stats_counts_drops(self):
+        tr = enable_tracing(ring_capacity=16)
+        for i in range(50):
+            tr.instant("e", i=i)
+        rs = tr.ring_stats()
+        assert rs["dropped"] == 50 - 16 and tr.dropped == 34
+        assert rs["ring_capacity"] == 16
+        assert rs["threads"][0]["occupancy"] == 16
+
+    def test_export_warns_on_dropped_events(self, tmp_path):
+        tr = enable_tracing(ring_capacity=16)
+        for i in range(40):
+            tr.instant("e", i=i)
+        with pytest.warns(UserWarning, match="ring wrap-around"):
+            tr.export(str(tmp_path / "t.json"))
+
+    def test_export_quiet_without_drops(self, tmp_path):
+        import warnings as w
+        tr = enable_tracing()
+        tr.instant("e")
+        with w.catch_warnings():
+            w.simplefilter("error")
+            tr.export(str(tmp_path / "t.json"))
+
+
+# ---------------------------------------------------------------------------
+# SLO burn-rate monitor
+# ---------------------------------------------------------------------------
+
+def _drive_windows(ts, name, t0, n_windows, dur, per_window=4, **args):
+    """Feed ``per_window`` spans into each of ``n_windows`` consecutive
+    windows, then close through the last one. Returns the next t0."""
+    t = t0
+    for _ in range(n_windows):
+        for k in range(per_window):
+            ts.on_event(X(name, t + 0.1 + 0.01 * k, dur, **args))
+        t += ts.window_s
+    ts.poll(now=t + ts.window_s)
+    return t
+
+
+class TestSloMonitor:
+    def _latency_slo(self, **kw):
+        base = dict(fast_windows=2, slow_windows=4, burn_threshold=2.0)
+        base.update(kw)
+        return Slo.latency("lat", "q", 0.01, objective=0.5, **base)
+
+    def test_fires_only_when_fast_and_slow_burn(self):
+        ts = TimeSeries(window_s=1.0)
+        mon = SloMonitor(ts, [self._latency_slo()])
+        t = _drive_windows(ts, "q", 0.0, 4, dur=1e-3)   # healthy
+        assert mon.status()["lat"]["state"] == "ok"
+        # one bad window: fast burn spikes, slow still diluted
+        t = _drive_windows(ts, "q", t, 1, dur=0.1)
+        fired_after_one = mon.fired
+        t = _drive_windows(ts, "q", t, 3, dur=0.1)      # sustained
+        assert mon.fired >= 1
+        assert mon.status()["lat"]["state"] == "firing"
+        assert mon.active_alerts()[0]["slo"] == "lat"
+        # recovery: fast window drains below threshold -> resolves
+        _drive_windows(ts, "q", t, 4, dur=1e-3)
+        assert mon.status()["lat"]["state"] == "ok"
+        assert mon.resolved == mon.fired == 1
+        assert fired_after_one <= 1
+
+    def test_zero_traffic_burns_nothing(self):
+        ts = TimeSeries(window_s=1.0)
+        mon = SloMonitor(ts, [self._latency_slo()])
+        ts.on_event(X("other", 0.1, 1e-3))
+        ts.poll(now=10.0)    # several empty windows close
+        st = mon.status()["lat"]
+        assert st["state"] == "ok"
+        assert st["fast_burn"] == 0.0 and st["good_fraction"] is None
+        assert mon.fired == 0
+
+    def test_bad_fraction_slo_counts_dropped_requests(self):
+        ts = TimeSeries(window_s=1.0)
+        slo = Slo.drop_rate("avail", span="serve.request", objective=0.5,
+                            fast_windows=1, slow_windows=2,
+                            burn_threshold=1.5)
+        mon = SloMonitor(ts, [slo])
+        t = 0.0
+        for w in range(3):
+            for k in range(4):
+                ts.on_event(X("serve.request", t + 0.1 + 0.01 * k, 1e-3,
+                              dropped=(w > 0)))
+            t += 1.0
+        ts.poll(now=t + 1.0)
+        assert mon.status()["avail"]["state"] == "firing"
+
+    def test_pipeline_ratio_slo_uses_window_deltas(self):
+        ts = TimeSeries(window_s=1.0)
+        pipe = {"hits": 0, "reads": 0}
+        slo = Slo.ratio("hit_rate", ("hits",), ("hits", "reads"),
+                        objective=0.5, fast_windows=1, slow_windows=2,
+                        burn_threshold=1.5)
+        mon = SloMonitor(ts, [slo], pipeline_source=lambda: dict(pipe))
+        # window 1: 100% hits cumulative
+        pipe.update(hits=10, reads=0)
+        ts.on_event(X("q", 0.5, 1e-3))
+        ts.on_event(X("q", 1.5, 1e-3))
+        assert mon.status()["hit_rate"]["state"] == "ok"
+        # window 2: cumulative still looks fine (14/18) but the DELTA
+        # is 4 hits / 18 reads — the monitor must see the regression
+        pipe.update(hits=14, reads=18)
+        ts.on_event(X("q", 2.5, 1e-3))
+        pipe.update(hits=18, reads=36)
+        ts.on_event(X("q", 3.5, 1e-3))
+        st = mon.status()["hit_rate"]
+        assert st["state"] == "firing"
+        assert st["good_fraction"] == pytest.approx(4 / 22, abs=0.05)
+
+    def test_alert_plumbing_callbacks_tracer_metrics(self):
+        tr = enable_tracing()
+        reg = MetricsRegistry()
+        got = []
+        ts = TimeSeries(window_s=1.0)
+        mon = SloMonitor(ts, [self._latency_slo(fast_windows=1,
+                                                slow_windows=1)],
+                         tracer=tr, metrics=reg, on_alert=got.append)
+        t = _drive_windows(ts, "q", 0.0, 2, dur=0.1)
+        assert got and isinstance(got[0], Alert)
+        assert got[0].state == "firing" and got[0].slo == "lat"
+        assert json.dumps(got[0].to_dict())   # JSON-able
+        snap = reg.snapshot()
+        assert snap["counters"]["slo.alerts_fired"] == 1
+        assert snap["gauges"]["slo.firing"] == 1
+        assert any(e["name"] == "slo.alert" for e in tr.events())
+        _drive_windows(ts, "q", t, 2, dur=1e-3)
+        assert reg.snapshot()["counters"]["slo.alerts_resolved"] == 1
+        assert reg.snapshot()["gauges"]["slo.firing"] == 0
+
+    def test_slo_spec_validation(self):
+        with pytest.raises(ValueError, match="objective"):
+            Slo.latency("x", "s", 0.1, objective=1.0)
+        with pytest.raises(ValueError, match="threshold_s"):
+            Slo("x", 0.9, "latency", span="s")
+        with pytest.raises(ValueError, match="total_fields"):
+            Slo("x", 0.9, "pipeline_ratio", good_fields=("a",))
+        with pytest.raises(ValueError, match="fast_windows"):
+            Slo.latency("x", "s", 0.1, fast_windows=9, slow_windows=3)
+        assert len(default_serving_slos()) == 5
+
+
+# ---------------------------------------------------------------------------
+# LiveCalibrator + CostModel live tier
+# ---------------------------------------------------------------------------
+
+class TestLiveCalibration:
+    def _ts_with_reads(self, per_window_s, buckets=1, per_window=3):
+        ts = TimeSeries(window_s=1.0)
+        t = 0.0
+        for dur in per_window_s:
+            for k in range(per_window):
+                ts.on_event(X("io.read", t + 0.1 + 0.01 * k, dur,
+                              buckets=buckets))
+            t += 1.0
+        ts.poll(now=t + 1.0)
+        return ts
+
+    def test_median_of_per_window_ratios(self):
+        ts = self._ts_with_reads([1e-3, 2e-3, 8e-3])
+        cal = LiveCalibrator(ts, windows=8, min_samples=4)
+        got = cal.read_s_per_bucket()
+        assert got["value"] == pytest.approx(2e-3)   # median, not mean
+        assert got["samples"] == 9 and got["windows"] == 3
+
+    def test_min_samples_gate(self):
+        ts = self._ts_with_reads([1e-3], per_window=2)
+        cal = LiveCalibrator(ts, windows=8, min_samples=4)
+        assert cal.read_s_per_bucket() is None
+        assert cal.constants() == {}
+
+    def test_rolling_horizon_forgets_old_regime(self):
+        ts = self._ts_with_reads([1e-3] * 6 + [5e-3] * 4)
+        cal = LiveCalibrator(ts, windows=4, min_samples=4)
+        assert cal.read_s_per_bucket()["value"] == pytest.approx(5e-3)
+
+    def test_link_gb_s_from_bytes(self):
+        ts = TimeSeries(window_s=1.0)
+        nbytes = 1 << 20
+        for t in (0.1, 0.2, 0.3, 0.4):
+            ts.on_event(X("link.xfer", t, nbytes / 2e9, bytes=nbytes))
+        ts.poll(now=2.0)
+        cal = LiveCalibrator(ts, min_samples=4)
+        assert cal.link_gb_s()["value"] == pytest.approx(2.0, rel=1e-6)
+        assert "h2d_gb_s" in cal.constants()
+
+    def test_cost_model_live_tier_and_provenance(self):
+        live = {"read_s_per_bucket": {"value": 3e-3, "samples": 12,
+                                      "windows": 4},
+                "h2d_gb_s": {"value": 8.0, "samples": 6, "windows": 4}}
+        m = CostModel.from_telemetry(None, None, live=live)
+        assert m.read_s_per_bucket == pytest.approx(3e-3)
+        assert m.h2d_gb_s == pytest.approx(8.0)
+        assert m.provenance["read_s_per_bucket"] == \
+            "live(12 spans/4 windows)"
+        assert "live" in m.provenance["link"]
+        assert "live" in m.describe()
+
+    def test_measured_beats_live_beats_config(self):
+        class Cfg:
+            emulate_read_latency_s = 7e-3
+            emulate_xfer_gb_s = 1.0
+        live = {"read_s_per_bucket": {"value": 3e-3, "samples": 2,
+                                      "windows": 1},
+                "h2d_gb_s": {"value": 8.0, "samples": 2, "windows": 1}}
+        pipeline = {"loads": 10, "read_s": 0.05}
+        m = CostModel.from_telemetry(Cfg(), pipeline, live=live)
+        assert m.read_s_per_bucket == pytest.approx(5e-3)  # measured
+        assert m.provenance["read_s_per_bucket"].startswith("measured")
+        # no counter measures the link: live IS its top tier
+        assert m.h2d_gb_s == pytest.approx(8.0)
+        m2 = CostModel.from_telemetry(Cfg(), None, live=None)
+        assert m2.read_s_per_bucket == pytest.approx(7e-3)  # config
+        assert m2.h2d_gb_s == pytest.approx(1.0)
+
+    def test_cost_model_accepts_calibrator_object(self):
+        ts = self._ts_with_reads([2e-3, 2e-3])
+        cal = LiveCalibrator(ts, min_samples=4)
+        m = CostModel.from_telemetry(None, None, live=cal)
+        assert m.read_s_per_bucket == pytest.approx(2e-3)
+
+
+# ---------------------------------------------------------------------------
+# attach_live end-to-end on a real session
+# ---------------------------------------------------------------------------
+
+class TestAttachLive:
+    def test_attach_serves_and_detach_restores(self, tmp_path):
+        index, x = _build_index(tmp_path)
+        assert not get_tracer().enabled
+        obs = index.attach_live(window_s=0.05)
+        assert get_tracer().enabled     # attach owns tracing when off
+        assert index.live is obs
+        with pytest.raises(RuntimeError, match="already attached"):
+            index.attach_live()
+        for i in range(20):
+            index.query(x[i])
+        time.sleep(0.06)
+        obs.poll()
+        snap = index.metrics_snapshot()
+        assert "io.read" in snap["live"]["spans"]
+        assert "query.execute" in snap["live"]["spans"]
+        assert snap["live"]["slos"]     # default serving SLOs watched
+        assert snap["tracer"]["enabled"] and snap["tracer"]["dropped"] == 0
+        index.detach_live()
+        assert index.live is None
+        assert not get_tracer().enabled  # owned tracing turned back off
+        assert "live" not in index.metrics_snapshot()
+        index.close()
+
+    def test_respects_existing_tracer(self, tmp_path):
+        index, x = _build_index(tmp_path)
+        with trace_session() as tr:
+            obs = index.attach_live(window_s=0.05)
+            assert obs.tracer is tr and not obs.owns_tracing
+            index.query(x[0])
+            index.detach_live()
+            assert get_tracer() is tr   # not ours: left enabled
+        index.close()
+
+    def test_live_constants_reach_planner(self, tmp_path):
+        index, x = _build_index(tmp_path)
+        index.attach_live(window_s=0.02, calibrate_min_samples=1,
+                          calibrate_windows=16)
+        for i in range(30):
+            index.query(x[i], emulate_read_latency_s=2e-3)
+            index.drop_warm_cache()
+        time.sleep(0.03)
+        index.live.poll()
+        consts = index.live.live_constants()
+        assert consts.get("read_s_per_bucket"), consts
+        cfg = index._resolve({"epsilon": 0.35})
+        # serving feeds no cumulative `loads` counter (batch joins do),
+        # so the live tier is the top candidate for the read constant
+        cost = index._planner_for(cfg).cost
+        assert "live(" in cost.provenance["read_s_per_bucket"]
+        assert cost.read_s_per_bucket == pytest.approx(
+            consts["read_s_per_bucket"]["value"])
+        index.detach_live()
+        index.close()
+
+    def test_close_detaches_live(self, tmp_path):
+        index, x = _build_index(tmp_path)
+        index.attach_live(window_s=0.05)
+        index.query(x[0])
+        index.close()
+        assert index.live is None
+        assert not get_tracer().enabled
+
+
+# ---------------------------------------------------------------------------
+# Periodic in-run residency snapshots
+# ---------------------------------------------------------------------------
+
+class TestPeriodicResidency:
+    def test_snapshots_during_serving_not_only_at_close(self, tmp_path):
+        index, x = _build_index(tmp_path)
+        res_path = os.path.join(index.workdir, "residency.json")
+        assert not os.path.exists(res_path)
+        index.enable_residency_snapshots(interval_s=0.0)
+        for i in range(8):
+            index.query(x[i])
+        index._residency_committer.drain()
+        assert os.path.exists(res_path), \
+            "no residency snapshot written mid-run"
+        with open(res_path) as f:
+            doc = json.load(f)
+        assert doc["format"] == "diskjoin-residency/v1"
+        assert doc["buckets"]            # warm buckets captured
+        assert index.stats.snapshot()["residency_snapshots"] >= 1
+        index.disable_residency_snapshots()
+        n = index.stats.snapshot()["residency_snapshots"]
+        index.query(x[0])
+        assert index.stats.snapshot()["residency_snapshots"] == n
+        index.close()
+
+    def test_interval_gates_submissions(self, tmp_path):
+        index, x = _build_index(tmp_path)
+        index.enable_residency_snapshots(interval_s=3600.0)
+        for i in range(5):
+            index.query(x[i])
+        # interval far in the future: boundary hook must not submit
+        assert index.stats.snapshot()["residency_snapshots"] == 0
+        index.close()
+
+    def test_attach_live_can_enable_residency(self, tmp_path):
+        index, x = _build_index(tmp_path)
+        index.attach_live(window_s=0.05, residency_interval_s=0.0)
+        index.query(x[0])
+        index._residency_committer.drain()
+        assert index.stats.snapshot()["residency_snapshots"] >= 1
+        index.close()
+
+
+# ---------------------------------------------------------------------------
+# Fleet merge: router metrics_snapshot + merge_live_sections
+# ---------------------------------------------------------------------------
+
+class TestFleetMerge:
+    def test_merge_live_sections_is_exact(self):
+        ts1 = TimeSeries(window_s=1.0)
+        ts2 = TimeSeries(window_s=1.0)
+        all_durs = []
+        for i, d in enumerate([1e-4, 3e-4, 9e-4, 2.7e-3]):
+            ts1.on_event(X("io.read", 0.1 + i * 0.01, d, buckets=1))
+            all_durs.append(d)
+        for i, d in enumerate([5e-4, 1.5e-3]):
+            ts2.on_event(X("io.read", 0.1 + i * 0.01, d, buckets=2))
+            all_durs.append(d)
+        ts1.poll(now=10.0)
+        ts2.poll(now=10.0)
+        merged = merge_live_sections([ts1.section(), ts2.section()])
+        agg = merged["spans"]["io.read"]
+        assert agg["count"] == 6
+        assert agg["units"] == pytest.approx(8.0)
+        assert agg["sum"] == pytest.approx(sum(all_durs))
+        # exactness: percentiles re-derived from summed buckets, equal to
+        # folding every sample into one histogram directly
+        one = TimeSeries(window_s=1.0)
+        for i, (d, u) in enumerate(zip(all_durs, [1, 1, 1, 1, 2, 2])):
+            one.on_event(X("io.read", 0.1 + i * 0.01, d, buckets=u))
+        one.poll(now=10.0)
+        ref = one.span_aggregate("io.read")
+        assert agg["buckets"] == ref["buckets"]
+        assert agg["p50"] == ref["p50"] and agg["p99"] == ref["p99"]
+
+    def test_merge_handles_zero_traffic_and_alerts(self):
+        ts = TimeSeries(window_s=1.0)
+        ts.on_event(X("q", 0.1, 1e-3))
+        ts.poll(now=5.0)
+        busy = ts.section()
+        busy["slos"] = {"lat": {"state": "firing", "fast_burn": 9.0,
+                                "slow_burn": 5.0}}
+        busy["alerts"] = {"fired": 2, "resolved": 1,
+                          "active": [{"slo": "lat"}]}
+        idle = TimeSeries(window_s=1.0).section()   # zero-traffic shard
+        idle["slos"] = {"lat": {"state": "ok", "fast_burn": 0.0,
+                                "slow_burn": 0.0}}
+        idle["alerts"] = {"fired": 0, "resolved": 0, "active": []}
+        merged = merge_live_sections([idle, busy])
+        assert merged["spans"]["q"]["count"] == 1
+        assert merged["slos"]["lat"]["state"] == "firing"
+        assert merged["slos"]["lat"]["fast_burn"] == 9.0
+        assert merged["alerts"] == {"fired": 2, "resolved": 1,
+                                    "active": [{"slo": "lat"}]}
+
+    def test_router_metrics_snapshot_merges_shard_rollups(self, tmp_path):
+        """Satellite acceptance: two live shards (one zero-traffic), the
+        router's metrics_snapshot re-merges the live sections through the
+        exact histogram-merge path."""
+        i1, x1 = _build_index(tmp_path, n=2000, seed=3, sub="s0")
+        i2, _ = _build_index(tmp_path, n=2000, seed=4, sub="s1")
+        router = IndexRouter([i1, i2], epsilon=0.35, close_shards=True)
+        router.attach_live(window_s=0.05, slos=())
+        # traffic pinned to shard 0's space: shard 1 may see zero spans
+        for i in range(15):
+            i1.query(x1[i])
+        time.sleep(0.06)
+        merged = router.metrics_snapshot()["live"]
+        assert merged["spans"]["query.execute"]["count"] >= 15
+        s0 = i1.metrics_snapshot()["live"]
+        s1 = i2.metrics_snapshot()["live"]
+        direct = merge_live_sections([s0, s1])
+        assert merged["spans"]["query.execute"]["buckets"] == \
+            direct["spans"]["query.execute"]["buckets"]
+        assert merged["events"] == s0["events"] + s1["events"]
+        router.detach_live()
+        assert i1.live is None and i2.live is None
+        router.close()
+
+
+# ---------------------------------------------------------------------------
+# Dashboard
+# ---------------------------------------------------------------------------
+
+class TestDash:
+    def _observer_with_traffic(self):
+        # render() re-polls with the real clock, so the synthetic spans
+        # must sit on the perf_counter timeline or they'd be evicted
+        tr = enable_tracing()
+        obs = LiveObserver(tr, window_s=0.05,
+                           slos=(Slo.latency("lat", "q", 0.01,
+                                             objective=0.5),))
+        base = time.perf_counter()
+        for k in range(6):
+            tr.complete("q", base - 0.5 + 0.01 * k, 1e-3)
+        tr.counter("io.depth", 3)
+        time.sleep(0.06)        # counter's window must close too
+        obs.timeseries.poll()
+        return obs
+
+    def test_render_shows_spans_slos_counters(self):
+        obs = self._observer_with_traffic()
+        text = dash.render(obs)
+        assert "q" in text and "p95" in text
+        assert "lat" in text and "OK" in text
+        assert "io.depth" in text
+        obs.close()
+
+    def test_render_rejects_bare_objects(self):
+        with pytest.raises(TypeError, match="attach_live"):
+            dash.render(object())
+
+    def test_watch_bounded_iterations(self):
+        obs = self._observer_with_traffic()
+        out = io.StringIO()
+        dash.watch(obs, interval_s=0.01, iterations=2, out=out,
+                   clear=False)
+        assert out.getvalue().count("DiskJoin live") == 2
+        obs.close()
+
+    def test_render_index_and_router_targets(self, tmp_path):
+        index, x = _build_index(tmp_path)
+        index.attach_live(window_s=0.05)
+        index.query(x[0])
+        time.sleep(0.06)
+        assert "query.execute" in dash.render(index)
+        index.detach_live()
+        index.close()
+
+
+# ---------------------------------------------------------------------------
+# Perf-regression comparator (benchmarks/regress.py)
+# ---------------------------------------------------------------------------
+
+class TestRegress:
+    @pytest.fixture()
+    def regress(self):
+        from benchmarks import regress
+        return regress
+
+    def test_classify_directions(self, regress):
+        assert regress.classify("overlap_efficiency") == "higher"
+        assert regress.classify("live_overhead_frac") == "lower"
+        assert regress.classify("ckpt_overhead") == "lower"
+        assert regress.classify("some_novel_stat") == "unknown"
+
+    def test_fraction_band_absolute(self, regress):
+        r = regress.compare_stat("hidden_fraction", 0.9, 0.7)
+        assert r["verdict"] == "regression"
+        assert regress.compare_stat("hidden_fraction", 0.9,
+                                    0.85)["verdict"] == "ok"
+        assert regress.compare_stat("overhead_frac", 0.01,
+                                    0.3)["verdict"] == "regression"
+
+    def test_multiplicative_band(self, regress):
+        assert regress.compare_stat("request_latency_us", 100.0,
+                                    150.0)["verdict"] == "ok"
+        assert regress.compare_stat("request_latency_us", 100.0,
+                                    500.0)["verdict"] == "regression"
+        assert regress.compare_stat("reads_saved", 100.0,
+                                    500.0)["verdict"] == "improvement"
+
+    def test_unknown_stats_report_only(self, regress):
+        assert regress.compare_stat("novel", 1.0, 99.0)["verdict"] == \
+            "info"
+
+    def test_compare_records_status_and_wall(self, regress):
+        base = {"figure": "f", "status": "ok", "wall_s": 10.0,
+                "trace_stats": {"goodput": 0.95}}
+        fresh = {"figure": "f", "status": "error", "wall_s": 50.0,
+                 "trace_stats": {"goodput": 0.4}}
+        d = regress.compare_records(base, fresh)
+        names = {r["name"] for r in d["regressions"]}
+        assert names == {"status", "wall_s", "goodput"}
+
+    def test_compare_dirs_and_check_exit(self, regress, tmp_path):
+        bdir, fdir = tmp_path / "base", tmp_path / "fresh"
+        bdir.mkdir(), fdir.mkdir()
+        rec = {"figure": "figX", "status": "ok", "wall_s": 1.0,
+               "trace_stats": {"goodput": 0.9, "novel": 1.0}}
+        (bdir / "BENCH_figX.json").write_text(json.dumps(rec))
+        good = dict(rec, wall_s=1.2)
+        (fdir / "BENCH_figX.json").write_text(json.dumps(good))
+        diff = regress.compare_dirs(str(fdir), str(bdir))
+        assert diff["num_regressions"] == 0
+        assert regress.main([str(fdir), "--baselines", str(bdir),
+                             "--check"]) == 0
+        bad = dict(rec, trace_stats={"goodput": 0.2, "novel": 5.0})
+        (fdir / "BENCH_figX.json").write_text(json.dumps(bad))
+        out = str(tmp_path / "diff.json")
+        assert regress.main([str(fdir), "--baselines", str(bdir),
+                             "--check", "--diff-out", out]) == 1
+        saved = json.load(open(out))
+        assert saved["num_regressions"] == 1
+        assert "figX" in regress.render(saved)
+
+    def test_committed_baselines_pass_against_themselves(self, regress):
+        diff = regress.compare_dirs(regress.BASELINE_DIR,
+                                    regress.BASELINE_DIR)
+        assert diff["compared"], "no committed baselines found"
+        assert diff["num_regressions"] == 0
+
+
+# ---------------------------------------------------------------------------
+# run.py record fields (perf-trajectory satellites)
+# ---------------------------------------------------------------------------
+
+class TestBenchRecord:
+    def test_record_carries_provenance_fields(self, tmp_path):
+        from benchmarks import run as bench_run
+        path = bench_run._write_record(
+            str(tmp_path), "figT", rows=[{"name": "r"}],
+            stats={"goodput": 1.0}, elapsed=1.25, status="ok",
+            fingerprint={"small": True})
+        rec = json.load(open(path))
+        assert rec["wall_s"] == 1.25
+        assert isinstance(rec["seed"], int)
+        assert rec["git_sha"] is None or len(rec["git_sha"]) == 40
+        assert rec["timestamp"].startswith("20")
+        assert rec["figure"] == "figT" and rec["status"] == "ok"
+
+    def test_committed_baselines_carry_the_fields(self, regress=None):
+        from benchmarks.regress import BASELINE_DIR, load_records
+        recs = load_records(BASELINE_DIR)
+        assert recs, "benchmarks/baselines is empty"
+        for rec in recs.values():
+            assert rec["wall_s"] > 0
+            assert "seed" in rec and "timestamp" in rec
