@@ -40,9 +40,10 @@ BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 # direction classification by name substring (first match wins,
 # HIGHER_BETTER checked first). Unknown stats are reported, not gated.
 HIGHER_BETTER = ("goodput", "overlap", "hidden", "precision", "recall",
-                 "hit", "saved", "parity", "resumed")
+                 "hit", "saved", "parity", "coverage", "resumed",
+                 "restarts")
 LOWER_BETTER = ("overhead", "drop", "error", "err", "wall", "elapsed",
-                "latency", "dropped")
+                "latency", "dropped", "failover", "mismatch")
 
 WALL_BAND = 3.0          # fresh wall may be up to 3× baseline
 FRAC_BAND = 0.15         # absolute band for fraction-like stats

@@ -26,7 +26,8 @@ from benchmarks import (common, fig7_baselines, fig8_recall, fig9_memory,
                         fig17_ablation, fig18_pruning, fig19_pipeline,
                         fig20_striping, fig21_online, fig22_scheduler,
                         fig23_device_pipeline, fig24_planner,
-                        fig25_resilience, fig26_live, kernel_roofline,
+                        fig25_resilience, fig26_live, fig27_replication,
+                        kernel_roofline,
                         obs_trace, randomness)
 
 MODULES = [
@@ -49,6 +50,7 @@ MODULES = [
     ("fig24_planner", fig24_planner),
     ("fig25_resilience", fig25_resilience),
     ("fig26_live", fig26_live),
+    ("fig27_replication", fig27_replication),
     ("obs_trace", obs_trace),
     ("randomness", randomness),
     ("kernel_roofline", kernel_roofline),

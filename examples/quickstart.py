@@ -155,6 +155,28 @@ def main() -> None:
     print(dash.render(index))                 # dash.watch(index) to follow
     index.detach_live()
 
+    # -- survive a replica death: replicated router + failover ---------------
+    from repro.ft import FaultInjector  # noqa: E402
+    from repro.serve import IndexRouter  # noqa: E402
+
+    idx_dir = os.path.join(workdir, "index")
+    router = IndexRouter(                     # 2 replicas of one shard —
+        [[DiskJoinIndex.open(idx_dir),        #   same manifest, separate
+          DiskJoinIndex.open(idx_dir)]],      #   sessions/pools/schedulers
+        epsilon=eps, close_shards=True)
+    before, _ = router.query(q, k=5)
+    FaultInjector().kill_replica(             # every read on replica 0 now
+        router.replica_sets[0].replicas[0])   #   fails; warm cache is lost
+    for _ in range(4):                        # routing rotates onto the
+        after, _ = router.query(q, k=5)       #   corpse, failover answers
+        assert np.array_equal(before, after)  #   anyway, health latches DOWN
+    rsnap = router.snapshot()["replica_sets"][0]
+    print(f"\nreplica kill survived: failovers="
+          f"{rsnap['counters']['failovers']}, replica healths="
+          f"{[r['health']['state'] for r in rsnap['replicas']]}")
+    router.close()                            # ReplicaSupervisor(router)
+                                              #   would restart the dead one
+
     # -- reattach later without rescanning -----------------------------------
     index.close()
     reopened = DiskJoinIndex.open(os.path.join(workdir, "index"))

@@ -341,6 +341,15 @@ class DiskJoinIndex:
             index._warm_start()
         return index
 
+    def reopen(self, *, warm_start: bool = True) -> "DiskJoinIndex":
+        """A fresh session over the same on-disk index — the supervised
+        restart path (``serve.replica.ReplicaSupervisor``): re-``open``
+        this session's ``workdir`` with its query-time defaults,
+        pre-faulting the residency snapshot by default. The dead session
+        is untouched (close it separately; it may be wedged)."""
+        return DiskJoinIndex.open(self.workdir, self.query_defaults,
+                                  warm_start=warm_start)
+
     def _write_manifest(self, layout_order, layout_kind) -> None:
         manifest = {
             "format": MANIFEST_FORMAT,

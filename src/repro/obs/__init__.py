@@ -41,6 +41,7 @@ from repro.obs.live import (
     default_serving_slos,
     merge_live_sections,
 )
+from repro.obs.webhook import WebhookSink
 
 __all__ = [
     "NOOP_SPAN",
@@ -66,4 +67,5 @@ __all__ = [
     "LiveObserver",
     "default_serving_slos",
     "merge_live_sections",
+    "WebhookSink",
 ]

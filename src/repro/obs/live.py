@@ -733,6 +733,16 @@ class LiveObserver:
             return {}
         return self.calibrator.constants()
 
+    def slo_firing(self) -> int:
+        """Number of SLOs currently firing (0 without a monitor) — the
+        burn-state fold consumed by ``serve.replica.HealthTracker``: a
+        replica whose SLOs are burning is DEGRADED for routing even
+        before individual requests visibly fail."""
+        if self.monitor is None:
+            return 0
+        self.timeseries.poll()
+        return len(self.monitor.active_alerts())
+
     def section(self) -> dict:
         # a scrape wants the windows as of *now* — close overdue ones so
         # a traffic gap doesn't freeze the reported aggregates

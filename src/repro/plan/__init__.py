@@ -10,10 +10,10 @@ from repro.plan.cost_model import CostModel
 from repro.plan.estimator import (SKETCH_FILE, CardinalityEstimator,
                                   PairEstimate)
 from repro.plan.planner import (Decision, JoinPlan, Planner, PoolPlan,
-                                WavePlan)
+                                WavePlan, predict_replica_service_s)
 
 __all__ = [
     "CardinalityEstimator", "PairEstimate", "SKETCH_FILE",
     "CostModel", "Planner", "JoinPlan", "WavePlan", "PoolPlan",
-    "Decision",
+    "Decision", "predict_replica_service_s",
 ]

@@ -413,3 +413,24 @@ class Planner:
         if self.metrics is not None:
             self.metrics.gauge("plan.warm_quota").set(quota)
         return plan
+
+
+# -- replica-aware service prediction -----------------------------------------
+
+def predict_replica_service_s(request_s: float, queue_depth: int, *,
+                              observed_s: float | None = None) -> float:
+    """Predicted time for a NEW request to clear a replica: its own
+    service (``request_s`` — a ``WavePlan.predicted_s`` for a
+    single-request wave, or an observed per-request EWMA) plus the
+    backlog already queued ahead of it, drained at the observed rate
+    when one is available.
+
+    This is the scoring function behind ``serve.replica.ReplicaSet``'s
+    ``least_loaded`` policy: with equal replicas it reduces to queue
+    depth; a replica whose live-calibrated costs have drifted up (a
+    browned-out SSD raises its ``read_s_per_bucket``, so its
+    ``predicted_s`` rises) is avoided even at equal depth.
+    """
+    per_request = observed_s if observed_s and observed_s > 0 \
+        else float(request_s)
+    return float(request_s) + max(0, int(queue_depth)) * per_request

@@ -5,13 +5,19 @@
 session, sharing the index's BufferPool/prefetcher and PipelineStats with
 batch joins (ROADMAP "serving integration").
 ``QueryScheduler`` — wave-batched request queue with probe-sharing,
-per-request deadlines and admission control (ROADMAP "serving
-hardening"); ``IndexRouter`` fronts multiple index shards with
-scatter/gather over per-shard schedulers. See README.md in this package
-for the request lifecycle.
+per-request deadlines, admission control and queue checkpointing
+(ROADMAP "serving hardening"); ``IndexRouter`` fronts multiple index
+shards with scatter/gather over health-gated replica sets
+(``ReplicaSet``/``HealthTracker``/``ReplicaSupervisor`` in
+``serve.replica`` — failover, hedging, supervised restart, degraded-mode
+coverage). See README.md in this package for the request lifecycle.
 """
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.query_service import VectorQueryService
+from repro.serve.replica import (DEGRADED, DOWN, HEALTHY, Coverage,
+                                 HealthTracker, Replica, ReplicaFuture,
+                                 ReplicaSet, ReplicaSupervisor,
+                                 ShardStatus, ShardUnavailable)
 from repro.serve.router import IndexRouter, RouterFuture
 from repro.serve.scheduler import (AdmissionRejected, DeadlineExceeded,
                                    QueryFuture, QueryScheduler,
@@ -21,4 +27,7 @@ from repro.serve.scheduler import (AdmissionRejected, DeadlineExceeded,
 __all__ = ["Request", "ServeEngine", "VectorQueryService",
            "QueryScheduler", "QueryFuture", "IndexRouter", "RouterFuture",
            "AdmissionRejected", "DeadlineExceeded", "SchedulerClosed",
-           "SchedulerQueueFull", "order_result"]
+           "SchedulerQueueFull", "order_result",
+           "Replica", "ReplicaSet", "ReplicaFuture", "ReplicaSupervisor",
+           "HealthTracker", "Coverage", "ShardStatus", "ShardUnavailable",
+           "HEALTHY", "DEGRADED", "DOWN"]

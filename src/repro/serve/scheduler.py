@@ -55,6 +55,8 @@ under contention) — safe to race against concurrent batch joins.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import threading
 import time
 from collections import deque
@@ -64,7 +66,10 @@ import numpy as np
 
 from repro.core.index import DiskJoinIndex
 from repro.core.types import BUILD_TIME_FIELDS, QUERY_TIME_FIELDS
+from repro.ft.atomic import AsyncCommitter, atomic_write_json
 from repro.obs import get_tracer
+
+QUEUE_SPILL_FORMAT = "diskjoin-queue/v1"
 
 
 class DeadlineExceeded(Exception):
@@ -87,13 +92,18 @@ class AdmissionRejected(RuntimeError):
     door before any queueing or disk read. Distinct from
     ``SchedulerQueueFull`` — that is the *capacity* bound; this is the
     *feasibility* bound. Carries the model's numbers so callers can
-    re-submit with a looser deadline."""
+    re-submit with a looser deadline — ``suggested_deadline_s`` is the
+    smallest deadline the model considers feasible (prediction plus the
+    wave wait window, with a 25% slack margin): re-pricing instead of
+    turning traffic away blind."""
 
     def __init__(self, msg: str, predicted_s: float | None = None,
-                 deadline_s: float | None = None):
+                 deadline_s: float | None = None,
+                 suggested_deadline_s: float | None = None):
         super().__init__(msg)
         self.predicted_s = predicted_s
         self.deadline_s = deadline_s
+        self.suggested_deadline_s = suggested_deadline_s
 
 
 def _check_k(k) -> int | None:
@@ -190,7 +200,8 @@ class QueryScheduler:
                  wave_size: int = 32, max_wait_s: float = 0.002,
                  max_queue: int = 1024, share_probes: bool = True,
                  admission: str = "queue",
-                 latency_window: int = 8192, **overrides):
+                 latency_window: int = 8192,
+                 resume_queue: str | None = None, **overrides):
         if wave_size < 1:
             raise ValueError(f"wave_size must be >= 1, got {wave_size}")
         if max_queue < 1:
@@ -231,6 +242,11 @@ class QueryScheduler:
         self._latencies: deque[float] = deque(maxlen=int(latency_window))
         self._wave_hist: deque[tuple[int, float]] = deque(
             maxlen=int(latency_window))
+        # queue checkpoint (repro.ft): a predecessor scheduler that was
+        # closed with persist_queue= spilled its admitted-but-unserved
+        # requests; re-enqueued below with their remaining deadlines
+        self.resumed: list[QueryFuture] = []
+        self.resume_dropped = 0
         # fold wave/latency counters into the session's metrics surface;
         # keep the returned (possibly suffixed) key for close()
         self._metrics_key = index.metrics.register_provider(
@@ -239,6 +255,8 @@ class QueryScheduler:
                                        name="diskjoin-serve-drain",
                                        daemon=True)
         self._drain.start()
+        if resume_queue is not None:
+            self._resume_from(resume_queue)
 
     @staticmethod
     def _check_overrides(overrides: dict) -> None:
@@ -288,15 +306,19 @@ class QueryScheduler:
                 self.index.stats.add("admission_rejects", 1)
                 with self._stats_lock:
                     self.admission_rejects += 1
+                suggested = (self.max_wait_s + pred) * 1.25
                 get_tracer().instant(
                     "serve.admission_reject", predicted_s=pred,
-                    deadline_s=float(deadline_s))
+                    deadline_s=float(deadline_s),
+                    suggested_deadline_s=suggested)
                 raise AdmissionRejected(
                     f"predicted service {pred * 1e3:.2f}ms (+ up to "
                     f"{self.max_wait_s * 1e3:.2f}ms wave wait) exceeds "
                     f"the {deadline_s * 1e3:.2f}ms deadline; rejected "
-                    f"before any read", predicted_s=pred,
-                    deadline_s=float(deadline_s))
+                    f"before any read (smallest feasible deadline_s "
+                    f"~= {suggested * 1e3:.2f}ms)", predicted_s=pred,
+                    deadline_s=float(deadline_s),
+                    suggested_deadline_s=suggested)
         fut = QueryFuture()
         now = time.perf_counter()
         req = _Request(q=q[0], k=k,
@@ -348,6 +370,65 @@ class QueryScheduler:
         """Synchronous convenience: ``submit`` + wait."""
         return self.submit(q, epsilon=epsilon, k=k, deadline_s=deadline_s,
                            **overrides).result(timeout=timeout)
+
+    # -- queue checkpoint (repro.ft) ------------------------------------------
+    def _resume_from(self, path: str) -> None:
+        """Re-enqueue requests a predecessor spilled with
+        ``close(persist_queue=…)``. Each rides in with its remaining
+        deadline budget — one that expired during the restart goes
+        through the normal pre-read drop path (an honest
+        ``DeadlineExceeded``, not silent loss). The spill file is
+        consumed (removed) so a crash loop cannot double-resume it."""
+        if not os.path.exists(path):
+            return
+        with open(path) as f:
+            payload = json.load(f)
+        if payload.get("format") != QUEUE_SPILL_FORMAT:
+            raise ValueError(f"{path}: not a {QUEUE_SPILL_FORMAT} spill")
+        os.remove(path)
+        # deadlines are wall-clock promises to callers: time spent down
+        # between spill and resume is charged against each request's
+        # remaining budget (perf_counter does not survive a process
+        # restart, so the spill stamps wall time)
+        downtime = max(0.0, time.time() - payload.get("spilled_at_unix",
+                                                      time.time()))
+        for rec in payload["requests"]:
+            ov = dict(rec["overrides"])
+            eps = ov.pop("epsilon", None)
+            rem = rec["remaining_s"]
+            if rem is not None:
+                rem -= downtime
+            try:
+                fut = self.submit(
+                    np.asarray(rec["q"], np.float32),
+                    epsilon=eps, k=rec["k"],
+                    deadline_s=None if rem is None else max(rem, 1e-9),
+                    **ov)
+            except (AdmissionRejected, SchedulerQueueFull):
+                self.resume_dropped += 1
+                continue
+            self.resumed.append(fut)
+
+    def _spill_queue(self, path: str, spilled: list[_Request]) -> None:
+        """Persist admitted-but-unserved requests through the ft async
+        committer (same atomic-write discipline as checkpoints)."""
+        now = time.perf_counter()
+        payload = {
+            "format": QUEUE_SPILL_FORMAT,
+            "spilled_at_unix": time.time(),
+            "requests": [{
+                "q": [float(v) for v in r.q],
+                "k": r.k,
+                "overrides": [[k, v] for k, v in r.overrides],
+                "remaining_s": (None if r.deadline_t is None
+                                else r.deadline_t - now),
+            } for r in spilled],
+        }
+        committer = AsyncCommitter(name="queue-spill")
+        try:
+            committer.submit(lambda: atomic_write_json(path, payload))
+        finally:
+            committer.close()
 
     @property
     def pending(self) -> int:
@@ -544,6 +625,8 @@ class QueryScheduler:
                 "waves": self.waves,
             }
         d["pending"] = self.pending
+        d["resumed"] = len(self.resumed)
+        d["resume_dropped"] = self.resume_dropped
         d["latency_p50_ms"] = (float(np.percentile(lats, 50)) * 1e3
                                if lats.size else 0.0)
         d["latency_p95_ms"] = (float(np.percentile(lats, 95)) * 1e3
@@ -554,16 +637,37 @@ class QueryScheduler:
         d["pipeline"] = self.index.pipeline_snapshot()
         return d
 
-    def close(self) -> None:
+    def close(self, persist_queue: str | None = None) -> None:
         """Stop accepting requests, drain every pending wave, join the
         drain thread. Pending futures complete normally (or with their
-        deadline/config error) — close never abandons accepted work."""
+        deadline/config error) — close never abandons accepted work.
+
+        ``persist_queue`` is the supervised-restart path: instead of
+        executing the pending queue (pointless against a dead store),
+        spill it to ``persist_queue`` via the ft ``AsyncCommitter``; a
+        successor scheduler opened with ``resume_queue=`` re-enqueues
+        every spilled request with its remaining deadline. The spilled
+        futures resolve with ``SchedulerClosed`` so a replica-set
+        caller fails over immediately rather than waiting on a corpse.
+        """
+        spilled: list[_Request] = []
         with self._cond:
             if self._closed:
                 return
             self._closed = True
+            if persist_queue is not None:
+                while self._queue:
+                    spilled.append(self._queue.popleft())
             self._cond.notify_all()
         self._drain.join()
+        if persist_queue is not None:
+            self._spill_queue(persist_queue, spilled)
+            exc = SchedulerClosed(
+                f"scheduler closed for restart; request spilled to "
+                f"{persist_queue} and will be re-executed on resume")
+            for r in spilled:
+                if r.future.set_running_or_notify_cancel():
+                    r.future.set_exception(exc)
         # a closed scheduler must not linger on the session's metrics
         # surface (tests open several schedulers per index)
         self.index.metrics.unregister_provider(self._metrics_key)
